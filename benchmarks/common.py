@@ -1,0 +1,81 @@
+"""Shared experiment harness for the E1-E6 paper reproductions.
+
+Each benchmark module exposes ``run(reps=...) -> dict`` and a ``main()``
+printing the ``name,us_per_call,derived`` CSV rows expected by run.py.
+Results are also dumped to benchmarks/artifacts/<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import RASKAgent, RaskConfig, violation_rate
+from repro.core.agents import DQNAgent, DQNConfig, VPAAgent
+from repro.env import EdgeEnvironment, bursty, constant, diurnal, \
+    paper_knowledge, paper_profiles
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+# experiment constants (paper §V)
+CYCLE_S = 10.0
+E1_DURATION = 600.0          # 60 iterations = 10 min (paper E1)
+# paper: 1 h patterns, 5 reps. We default to 30 min x 3 reps (same cycle
+# count per unit time; CPU wall-clock budget) — EXPERIMENTS.md notes this.
+E3_DURATION = 1800.0
+REPS = 2
+
+
+def save(name: str, payload: dict) -> None:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def load(name: str):
+    p = ARTIFACTS / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def make_env(seed: int, patterns=None, replicas: int = 1,
+             capacity: float = 8.0) -> EdgeEnvironment:
+    return EdgeEnvironment(list(paper_profiles().values()),
+                           {"cores": capacity}, patterns=patterns,
+                           replicas=replicas, seed=seed)
+
+
+def make_rask(env, seed: int, **cfg_kw) -> RASKAgent:
+    return RASKAgent(env.platform, paper_knowledge(),
+                     RaskConfig(**cfg_kw), seed=seed)
+
+
+def e3_patterns(kind: str, duration: float, seed: int):
+    """Fig. 7: QR scaled to 100 RPS, CV to 10 RPS, PC constant."""
+    fn = bursty if kind == "bursty" else diurnal
+    return {"qr-detector": fn(100.0, duration_s=duration, seed=seed),
+            "cv-analyzer": fn(10.0, duration_s=duration, seed=seed + 100),
+            "pc-visualizer": constant(50.0)}
+
+
+def run_agent(env, agent, duration: float):
+    t0 = time.perf_counter()
+    hist = env.run(agent, duration_s=duration, cycle_s=CYCLE_S)
+    wall = time.perf_counter() - t0
+    f = [h.fulfillment for h in hist]
+    rt = [h.runtime_s for h in hist if not h.explored and h.runtime_s > 0]
+    # relative load curve from the widest-dynamic-range service (constant
+    # streams like PC would otherwise saturate the normalization)
+    keys = list(hist[0].rps) if hist else []
+    span = {k: max(h.rps[k] for h in hist) - min(h.rps[k] for h in hist)
+            for k in keys}
+    ref = max(span, key=span.get) if keys else None
+    peak = max((h.rps[ref] for h in hist), default=1.0) if ref else 1.0
+    load = [h.rps[ref] / max(peak, 1e-9) if ref else 0.0 for h in hist]
+    return {"fulfillment": f,
+            "load": load,
+            "mean_fulfillment": float(np.mean(f)),
+            "violations": violation_rate(f),
+            "runtime_ms": [r * 1e3 for r in rt],
+            "median_runtime_ms": float(np.median(rt) * 1e3) if rt else 0.0,
+            "wall_s": wall}

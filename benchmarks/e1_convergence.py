@@ -1,0 +1,41 @@
+"""E1 (Fig. 5): RASK training convergence vs (xi, eta).
+
+6 hyperparameter combinations x 5 reps x 60 cycles. Derived metric: mean
+fulfillment of the last 10 cycles for the paper's chosen config {xi=20,
+eta=0} — the paper's claim is that 20 exploration iterations (200 s) are
+sufficient.
+"""
+import numpy as np
+
+from . import common
+
+
+def run(reps: int = common.REPS, duration: float = common.E1_DURATION):
+    combos = [(xi, eta) for xi in (0, 10, 20) for eta in (0.0, 0.1)]
+    results = {}
+    for xi, eta in combos:
+        curves = []
+        for rep in range(reps):
+            env = common.make_env(seed=rep)
+            agent = common.make_rask(env, seed=rep, xi=xi, eta=eta)
+            out = common.run_agent(env, agent, duration)
+            curves.append(out["fulfillment"])
+        arr = np.asarray(curves)
+        results[f"xi={xi},eta={eta}"] = {
+            "mean_curve": arr.mean(0).tolist(),
+            "std_curve": arr.std(0).tolist(),
+            "final10_mean": float(arr[:, -10:].mean()),
+            "final10_std": float(arr[:, -10:].std()),
+        }
+    common.save("e1_convergence", results)
+    return results
+
+
+def main():
+    r = run()
+    for k, v in r.items():
+        print(f"e1[{k}],0,{v['final10_mean']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""E2 (Table IV): polynomial degree vs test-split MSE per service.
+
+Training data comes from an E1-style run ({xi=20, eta=0}); each service's
+(X, Y) table is fit at degrees 1..6 and scored on a 20% split.
+"""
+import numpy as np
+
+from repro.core.regression import fit_polynomial, mse, train_test_split
+
+from . import common
+
+
+def run(duration: float = common.E1_DURATION, seed: int = 0):
+    env = common.make_env(seed=seed)
+    agent = common.make_rask(env, seed=seed, xi=20, eta=0.0)
+    common.run_agent(env, agent, duration)
+
+    table = {}
+    best = {}
+    for sid in agent.services:
+        svc = env.platform.service(sid)
+        feats = tuple(agent.knowledge[svc.sid.type]["tp_max"])
+        X, Y = agent.table.design_matrix(sid, feats, "tp_max")
+        scale = [svc.api.parameter(f).max_value for f in feats]
+        Xtr, Ytr, Xte, Yte = train_test_split(X, Y, seed=seed)
+        row = {}
+        for d in range(1, 7):
+            m = fit_polynomial(Xtr, Ytr, d, x_scale=scale)
+            row[d] = float(mse(m, Xte, Yte))
+        table[svc.sid.type] = row
+        best[svc.sid.type] = min(row, key=row.get)
+    out = {"mse": table, "best_degree": best}
+    common.save("e2_poly_degree", out)
+    return out
+
+
+def main():
+    r = run()
+    for svc, row in r["mse"].items():
+        print(f"e2[{svc}],0,best_degree={r['best_degree'][svc]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""E4 (Fig. 9): RASK runtime + fulfillment vs number of elasticity
+dimensions (1 = cores only; 2 = +data quality; 3 = +model size for CV).
+
+Dimensionality is restricted by *freezing* the extra parameters at their
+defaults inside the solver bounds (lower == upper), so the optimization
+problem genuinely shrinks, as in the paper.
+"""
+import numpy as np
+
+from repro.core.rask import RASKAgent, RaskConfig
+from repro.core.solver import ServiceSpec, SolverProblem
+
+from . import common
+
+
+def restrict_dimensions(agent: RASKAgent, dims: int) -> None:
+    """Freeze parameters beyond ``dims`` by collapsing their bounds."""
+    keep_by_dim = {1: ("cores",),
+                   2: ("cores", "data_quality"),
+                   3: ("cores", "data_quality", "model_size")}
+    keep = keep_by_dim[dims]
+    specs = []
+    for spec in agent.problem.specs:
+        svc = agent.platform.service(spec.name)
+        lower, upper = list(spec.lower), list(spec.upper)
+        for i, pname in enumerate(spec.param_names):
+            if pname not in keep:
+                d = svc.api.parameter(pname).default
+                lower[i] = upper[i] = d
+        specs.append(ServiceSpec(spec.name, spec.param_names, tuple(lower),
+                                 tuple(upper), spec.resource_mask, spec.slos,
+                                 spec.relation_features))
+    agent.problem = SolverProblem(specs)
+
+
+def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
+        cache: bool = True, backend: str = "slsqp"):
+    results = {}
+    for dims in (1, 2, 3):
+        runs = []
+        for rep in range(reps):
+            patterns = common.e3_patterns("diurnal", duration, seed=rep)
+            env = common.make_env(seed=rep, patterns=patterns)
+            agent = common.make_rask(env, seed=rep, xi=20, eta=0.0,
+                                     cache=cache, backend=backend)
+            restrict_dimensions(agent, dims)
+            runs.append(common.run_agent(env, agent, duration))
+        results[dims] = {
+            "median_runtime_ms": float(np.median(
+                np.concatenate([r["runtime_ms"] for r in runs]))),
+            "runtime_ms_p95": float(np.percentile(
+                np.concatenate([r["runtime_ms"] for r in runs]), 95)),
+            "median_fulfillment": float(np.median(
+                np.concatenate([r["fulfillment"] for r in runs]))),
+        }
+    common.save(f"e4_dimensions_{backend}_cache{int(cache)}", results)
+    return results
+
+
+def main():
+    for backend in ("slsqp", "pgd"):
+        r = run(backend=backend)
+        for dims, v in r.items():
+            print(f"e4[{backend},dims={dims}],"
+                  f"{v['median_runtime_ms'] * 1e3:.0f},"
+                  f"{v['median_fulfillment']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

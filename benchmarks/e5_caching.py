@@ -1,0 +1,24 @@
+"""E5 (Fig. 10): solver warm-start caching on/off across dimensions."""
+from . import common
+from .e4_dimensions import run as run_e4
+
+
+def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2):
+    out = {"cache_on": run_e4(reps, duration, cache=True,
+                              backend="slsqp"),
+           "cache_off": run_e4(reps, duration, cache=False,
+                               backend="slsqp")}
+    common.save("e5_caching", out)
+    return out
+
+
+def main():
+    r = run()
+    for mode, table in r.items():
+        for dims, v in table.items():
+            print(f"e5[{mode},dims={dims}],{v['median_runtime_ms'] * 1e3:.0f},"
+                  f"{v['median_fulfillment']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

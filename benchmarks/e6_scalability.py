@@ -1,0 +1,45 @@
+"""E6 (Fig. 11): scalability to 3/6/9 services (replicated QR/CV/PC images,
+proportional capacity 8/16/24 cores). Also the beyond-paper comparison:
+the vmapped multi-start PGD solver vs scipy SLSQP at each |S| — the paper's
+Discussion explicitly flags solver parallelization as the fix for E6's
+runtime growth.
+"""
+import numpy as np
+
+from . import common
+
+
+def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
+        backends=("slsqp", "pgd")):
+    results = {}
+    for backend in backends:
+        for replicas, cores in ((1, 8.0), (2, 16.0), (3, 24.0)):
+            runs = []
+            for rep in range(reps):
+                patterns = common.e3_patterns("diurnal", duration, seed=rep)
+                env = common.make_env(seed=rep, patterns=patterns,
+                                      replicas=replicas, capacity=cores)
+                agent = common.make_rask(env, seed=rep, xi=20, eta=0.0,
+                                         backend=backend)
+                runs.append(common.run_agent(env, agent, duration))
+            rts = np.concatenate([r["runtime_ms"] for r in runs])
+            fls = np.concatenate([r["fulfillment"] for r in runs])
+            results[f"{backend},S={replicas * 3}"] = {
+                "median_runtime_ms": float(np.median(rts)),
+                "runtime_ms_p95": float(np.percentile(rts, 95)),
+                "max_runtime_ms": float(np.max(rts)),
+                "median_fulfillment": float(np.median(fls)),
+            }
+    common.save("e6_scalability", results)
+    return results
+
+
+def main():
+    r = run()
+    for k, v in r.items():
+        print(f"e6[{k}],{v['median_runtime_ms'] * 1e3:.0f},"
+              f"{v['median_fulfillment']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

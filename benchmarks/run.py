@@ -1,0 +1,120 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only e1,e3]
+
+Prints ``name,us_per_call,derived`` CSV rows; artifacts land in
+benchmarks/artifacts/.
+"""
+import argparse
+import sys
+import time
+
+
+def _report_from_artifacts(name, common) -> bool:
+    """Print the CSV rows for ``name`` from cached artifacts. Returns True
+    if the artifact existed (benchmarks are deterministic given seeds, so a
+    cached artifact is the experiment's result; --force recomputes)."""
+    if name == "e1":
+        r = common.load("e1_convergence")
+        if not r:
+            return False
+        for k, v in r.items():
+            print(f"e1[{k}],0,{v['final10_mean']:.4f}")
+        return True
+    if name == "e2":
+        r = common.load("e2_poly_degree")
+        if not r:
+            return False
+        for svc, row in r["mse"].items():
+            print(f"e2[{svc}],0,best_degree={r['best_degree'][svc]}")
+        return True
+    if name == "e3":
+        r = common.load("e3_sota_comparison")
+        if not r:
+            return False
+        for kind, pa in r.items():
+            for agent in ("rask", "rask_pgd", "vpa", "dqn"):
+                if agent not in pa:
+                    continue
+                print(f"e3[{kind},{agent}],0,"
+                      f"{pa[agent]['mean_fulfillment']:.4f}"
+                      f" peak={pa[agent].get('peak_fulfillment', 0):.4f}")
+            print(f"e3[{kind},peak-violation-reduction],0,"
+                  f"{pa['violation_reduction_vs_best_baseline']:.4f}")
+        return True
+    if name == "e4":
+        found = False
+        for backend in ("slsqp", "pgd"):
+            r = common.load(f"e4_dimensions_{backend}_cache1")
+            if not r:
+                continue
+            found = True
+            for dims, v in r.items():
+                print(f"e4[{backend},dims={dims}],"
+                      f"{v['median_runtime_ms'] * 1e3:.0f},"
+                      f"{v['median_fulfillment']:.4f}")
+        return found
+    if name == "e5":
+        r = common.load("e5_caching")
+        if not r:
+            return False
+        for mode, table in r.items():
+            for dims, v in table.items():
+                print(f"e5[{mode},dims={dims}],"
+                      f"{v['median_runtime_ms'] * 1e3:.0f},"
+                      f"{v['median_fulfillment']:.4f}")
+        return True
+    if name == "e6":
+        r = common.load("e6_scalability")
+        if not r:
+            return False
+        for k, v in r.items():
+            print(f"e6[{k}],{v['median_runtime_ms'] * 1e3:.0f},"
+                  f"{v['median_fulfillment']:.4f}")
+        return True
+    return False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced reps/durations (CI-sized)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even when an artifact exists")
+    args = ap.parse_args()
+
+    from . import (common, e1_convergence, e2_poly_degree,
+                   e3_sota_comparison, e4_dimensions, e5_caching,
+                   e6_scalability, roofline)
+
+    if args.quick:
+        common.REPS = 2
+        common.E1_DURATION = 400.0
+        common.E3_DURATION = 900.0
+
+    suites = {
+        "e1": e1_convergence.main,
+        "e2": e2_poly_degree.main,
+        "e3": e3_sota_comparison.main,
+        "e4": e4_dimensions.main,
+        "e5": e5_caching.main,
+        "e6": e6_scalability.main,
+        "roofline": roofline.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        if not args.force and _report_from_artifacts(name, common):
+            print(f"# {name} reported from cached artifact "
+                  f"(--force recomputes)", flush=True)
+            continue
+        fn()
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""The TPU adaptation (DESIGN.md §2): MUDAP + RASK autoscaling three
+co-located LM *serving* services sharing one pod's chip budget.
+
+Elasticity dimensions per service: chips (resource), context budget
+(data-quality analog), model rung (model-size analog). Throughput surfaces
+are calibrated from the dry-run roofline if benchmarks/artifacts/
+lm_calibration.json exists (run `python -m benchmarks.roofline` first).
+
+    PYTHONPATH=src python examples/autoscale_lm_services.py
+"""
+from repro.launch.autoscale import main
+
+history = main(["--minutes", "10", "--chips", "16", "--pattern", "diurnal"])

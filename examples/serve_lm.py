@@ -1,0 +1,9 @@
+"""Continuous-batching serving example: a smoke qwen3 model, 24 batched
+requests through the engine, reporting token throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+engine = main(["--arch", "qwen3-32b", "--requests", "24",
+               "--prompt-len", "32", "--max-new", "8", "--slots", "4"])

@@ -1,0 +1,2 @@
+"""MUDAP/RASK multi-dimensional autoscaling on a multi-pod JAX substrate."""
+__version__ = "0.1.0"

@@ -1,0 +1,18 @@
+"""Core library: the paper's contribution (MUDAP platform + RASK agent)."""
+from .elasticity import ApiDescription, ElasticityParameter, ServiceId
+from .platform import MUDAP, ServiceBackend
+from .rask import CycleResult, RaskConfig, RASKAgent
+from .regression import (PolynomialModel, fit_polynomial, mse,
+                         polynomial_exponents, select_degree)
+from .slo import SLO, completion, fulfillment, global_fulfillment, \
+    service_fulfillment, violation_rate
+from .solver import ServiceSpec, SolverProblem
+
+__all__ = [
+    "ApiDescription", "ElasticityParameter", "ServiceId", "MUDAP",
+    "ServiceBackend", "CycleResult", "RaskConfig", "RASKAgent",
+    "PolynomialModel", "fit_polynomial", "mse", "polynomial_exponents",
+    "select_degree", "SLO", "completion", "fulfillment",
+    "global_fulfillment", "service_fulfillment", "violation_rate",
+    "ServiceSpec", "SolverProblem",
+]

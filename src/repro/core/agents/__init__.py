@@ -1,0 +1,4 @@
+from .vpa import VPAAgent
+from .dqn import DQNAgent, DQNConfig
+
+__all__ = ["VPAAgent", "DQNAgent", "DQNConfig"]

@@ -1,0 +1,232 @@
+"""DQN baseline — paper §V-C3.
+
+"Approximates Q-values for discrete state-action pairs. To support
+service-specific scaling policies, services are modeled through separate
+DQNs. Models are pre-trained jointly within a shared environment, which,
+given an action, estimates the expected state and reward (i.e., SLO
+fulfillment) according to RASK's regression model. The DQN agent has access
+to all available elasticity dimensions; however, to decrease the action
+space, it only infers a single action per service."
+
+Pure-JAX implementation: per-service MLP Q-network (no torch), replay
+buffer, target network, epsilon-greedy pre-training inside a model-based
+environment driven by a fitted ``PolynomialModel`` (the same surfaces RASK
+learns). Actions are coarse-grained (one ±step move of one parameter, or
+no-op) — deliberately discrete, which is exactly the limitation (3) the
+paper attributes to RL baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..elasticity import ApiDescription
+from ..platform import MUDAP
+from ..rask import CycleResult
+from ..regression import PolynomialModel
+from ..slo import SLO
+from ..solver import COMPLETION, THROUGHPUT_MAX
+
+
+@dataclasses.dataclass
+class DQNConfig:
+    hidden: int = 64
+    lr: float = 3e-4
+    gamma: float = 0.9
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    train_steps: int = 3000
+    batch_size: int = 64
+    buffer: int = 10000
+    target_sync: int = 200
+    episode_len: int = 40
+    resource: str = "cores"
+
+
+def _mlp_init(key, sizes: Sequence[int]):
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k1, k2 = jax.random.split(key, 3)
+        w = jax.random.normal(k1, (sizes[i], sizes[i + 1])) * \
+            jnp.sqrt(2.0 / sizes[i])
+        params.append((w, jnp.zeros((sizes[i + 1],))))
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _td_step(params, target_params, opt_state, batch, gamma: float, lr):
+    s, a, r, s2, done = batch
+
+    def loss_fn(p):
+        q = _mlp_apply(p, s)
+        q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+        q2 = jnp.max(_mlp_apply(target_params, s2), axis=1)
+        tgt = r + gamma * (1.0 - done) * q2
+        return jnp.mean((q_sa - jax.lax.stop_gradient(tgt)) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    # simple Adam
+    m, v, t = opt_state
+    t = t + 1
+    m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, m, grads)
+    v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g, v, grads)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / (1 - 0.9 ** t)) /
+        (jnp.sqrt(v_ / (1 - 0.999 ** t)) + 1e-8), params, m, v)
+    return params, (m, v, t), loss
+
+
+class ServiceDQN:
+    """One per-service Q-network over the discrete move-one-knob action set."""
+
+    def __init__(self, api: ApiDescription, slos: Sequence[SLO],
+                 cfg: DQNConfig, seed: int):
+        self.api = api
+        self.slos = list(slos)
+        self.cfg = cfg
+        self.names = api.names
+        self.lo = np.asarray([p.min_value for p in api.parameters], np.float32)
+        self.hi = np.asarray([p.max_value for p in api.parameters], np.float32)
+        self.steps = np.asarray(
+            [p.step if p.step else (p.max_value - p.min_value) / 10.0
+             for p in api.parameters], np.float32)
+        self.n_actions = 2 * len(self.names) + 1
+        self.state_dim = len(self.names) + 2          # params + rps + completion
+        sizes = [self.state_dim, cfg.hidden, cfg.hidden, self.n_actions]
+        key = jax.random.PRNGKey(seed)
+        self.params = _mlp_init(key, sizes)
+        self.target = self.params
+        zeros = jax.tree.map(jnp.zeros_like, self.params)
+        self.opt_state = (zeros, zeros, jnp.int32(0))
+
+    def norm_state(self, p: np.ndarray, rps: float, completion: float):
+        x = (p - self.lo) / np.maximum(self.hi - self.lo, 1e-9)
+        return np.concatenate([x, [rps / 100.0, completion]]).astype(np.float32)
+
+    def apply_action(self, p: np.ndarray, action: int) -> np.ndarray:
+        p = p.copy()
+        if action < 2 * len(self.names):
+            idx, direction = divmod(action, 2)
+            p[idx] += self.steps[idx] * (1.0 if direction == 0 else -1.0)
+        return np.clip(p, self.lo, self.hi)
+
+    def q_values(self, state: np.ndarray) -> np.ndarray:
+        return np.asarray(_mlp_apply(self.params, jnp.asarray(state)[None])[0])
+
+    def reward(self, p: np.ndarray, tp_max: float, rps: float) -> float:
+        """Weighted SLO fulfillment of the estimated next state (Eq. 8 terms)."""
+        num = den = 0.0
+        for q in self.slos:
+            if q.metric in self.names:
+                phi = min(p[self.names.index(q.metric)] / q.target, 1.0)
+            elif q.metric == COMPLETION:
+                phi = min(tp_max / max(rps * q.target, 1e-9), 1.0)
+            else:
+                continue
+            num += q.weight * phi
+            den += q.weight
+        return num / max(den, 1e-9)
+
+
+class DQNAgent:
+    """Pre-trained per-service DQNs acting greedily on the MUDAP platform."""
+
+    def __init__(self, platform: MUDAP, cfg: DQNConfig = DQNConfig(),
+                 seed: int = 0):
+        self.platform = platform
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self.rounds = -1
+        self.nets: Dict[str, ServiceDQN] = {}
+        for i, sid in enumerate(platform.services()):
+            svc = platform.service(sid)
+            self.nets[sid] = ServiceDQN(svc.api, svc.slos, cfg, seed + i)
+
+    # -- offline pre-training in the regression-model environment --------------
+    def pretrain(self, models: Mapping[str, PolynomialModel],
+                 default_rps: Mapping[str, float],
+                 features: Mapping[str, Sequence[str]]) -> Dict[str, float]:
+        """models: sid -> tp_max PolynomialModel (RASK's learned surface).
+
+        The environment model: action -> clipped params -> tp_max = w(p) ->
+        reward = weighted SLO fulfillment at the service's *default* RPS
+        (the paper notes the DQN "was not trained for different RPS").
+        """
+        losses = {}
+        for sid, net in self.nets.items():
+            model = models[sid]
+            rps = float(default_rps[sid])
+            feat_idx = [net.names.index(f) for f in features[sid]]
+            buf_s, buf_a, buf_r, buf_s2, buf_d = [], [], [], [], []
+            p = (net.lo + net.hi) / 2.0
+            completion = 0.0
+            eps = self.cfg.eps_start
+            last_loss = float("nan")
+            for step in range(self.cfg.train_steps):
+                if step % self.cfg.episode_len == 0:
+                    p = self.rng.uniform(net.lo, net.hi).astype(np.float32)
+                s = net.norm_state(p, rps, completion)
+                if self.rng.random() < eps:
+                    a = int(self.rng.integers(net.n_actions))
+                else:
+                    a = int(np.argmax(net.q_values(s)))
+                p2 = net.apply_action(p, a)
+                tp = float(model.predict(jnp.asarray(p2[feat_idx])))
+                r = net.reward(p2, tp, rps)
+                completion2 = min(tp / max(rps, 1e-9), 1.0)
+                s2 = net.norm_state(p2, rps, completion2)
+                buf_s.append(s); buf_a.append(a); buf_r.append(r)
+                buf_s2.append(s2); buf_d.append(0.0)
+                if len(buf_s) > self.cfg.buffer:
+                    del buf_s[0], buf_a[0], buf_r[0], buf_s2[0], buf_d[0]
+                p, completion = p2, completion2
+                eps = max(self.cfg.eps_end,
+                          eps - (self.cfg.eps_start - self.cfg.eps_end)
+                          / (0.8 * self.cfg.train_steps))
+                if len(buf_s) >= self.cfg.batch_size:
+                    idx = self.rng.integers(len(buf_s), size=self.cfg.batch_size)
+                    batch = (jnp.asarray(np.stack([buf_s[i] for i in idx])),
+                             jnp.asarray(np.asarray([buf_a[i] for i in idx])),
+                             jnp.asarray(np.asarray([buf_r[i] for i in idx],
+                                                    np.float32)),
+                             jnp.asarray(np.stack([buf_s2[i] for i in idx])),
+                             jnp.asarray(np.asarray([buf_d[i] for i in idx],
+                                                    np.float32)))
+                    net.params, net.opt_state, loss = _td_step(
+                        net.params, net.target, net.opt_state, batch,
+                        self.cfg.gamma, jnp.float32(self.cfg.lr))
+                    last_loss = float(loss)
+                if step % self.cfg.target_sync == 0:
+                    net.target = net.params
+            losses[sid] = last_loss
+        return losses
+
+    # -- online: one greedy action per service per cycle -------------------------
+    def cycle(self, t: float) -> CycleResult:
+        self.rounds += 1
+        applied: Dict[str, Dict[str, float]] = {}
+        for sid, net in self.nets.items():
+            state = self.platform.window_state(sid, since=t - 5.0, until=t)
+            cur = self.platform.assignment(sid)
+            p = np.asarray([cur[n] for n in net.names], np.float32)
+            rps = float(state.get("rps", 0.0))
+            comp = float(state.get("completion", 0.0))
+            s = net.norm_state(p, rps, comp)
+            a = int(np.argmax(net.q_values(s)))
+            p2 = net.apply_action(p, a)
+            applied[sid] = {n: self.platform.scale(sid, n, float(v))
+                            for n, v in zip(net.names, p2)}
+        return CycleResult(self.rounds, False, applied, 0.0)

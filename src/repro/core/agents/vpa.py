@@ -1,0 +1,55 @@
+"""VPA baseline — replicates the Kubernetes Vertical Pod Autoscaler (paper §V-C3).
+
+Per service container it maintains a resource *slack* of 5–15 % [34]: target
+utilization of the scheduled CPU quota between 85 % and 95 %. Outside the
+band it adjusts ``cores`` by ±0.25. It is resource-only (one elasticity
+dimension) and — as in the paper — can only claim cores that other services
+have released ("if all available resources are allocated, they can only be
+reassigned once released"); MUDAP's global-headroom clipping enforces that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from ..platform import MUDAP
+from ..rask import CycleResult
+
+
+@dataclasses.dataclass
+class VPAConfig:
+    resource: str = "cores"
+    step: float = 0.25
+    low: float = 0.85    # below -> over-provisioned, scale down
+    high: float = 0.95   # above -> under-provisioned, scale up
+
+
+class VPAAgent:
+    def __init__(self, platform: MUDAP, config: VPAConfig = VPAConfig()):
+        self.platform = platform
+        self.cfg = config
+        self.rounds = -1
+
+    def cycle(self, t: float) -> CycleResult:
+        self.rounds += 1
+        applied: Dict[str, Dict[str, float]] = {}
+        for sid in self.platform.services():
+            state = self.platform.window_state(sid, since=t - 5.0, until=t)
+            if not state:
+                continue
+            alloc = self.platform.assignment(sid).get(self.cfg.resource)
+            if alloc is None:
+                continue
+            util = state.get("cpu_utilization")
+            if util is None:
+                used = state.get("cores_used", 0.0)
+                util = used / max(alloc, 1e-9)
+            if util > self.cfg.high:
+                new = alloc + self.cfg.step
+            elif util < self.cfg.low:
+                new = alloc - self.cfg.step
+            else:
+                continue
+            applied[sid] = {self.cfg.resource:
+                            self.platform.scale(sid, self.cfg.resource, new)}
+        return CycleResult(self.rounds, False, applied, 0.0)

@@ -1,0 +1,130 @@
+"""MUDAP — the Multi-dimensional Autoscaling Platform (paper §III).
+
+The platform is *service-agnostic*: it knows nothing about what a parameter
+does. Each managed service hands MUDAP (1) an ``ApiDescription`` (Table I) and
+(2) a ``ServiceBackend`` handle — the moral equivalent of the in-container
+HTTP server + Docker API of the prototype. Scaling requests are clipped to
+the advertised bounds/steps and forwarded; resource-class parameters are
+additionally checked against the *global* capacity so one service cannot
+starve the rest (a request that would overflow C is clipped to the remaining
+headroom, mirroring Docker refusing an over-quota).
+
+Metrics are scraped every second into the ``TimeSeriesDB`` (§III-A), from
+which agents read windowed aggregates (§IV-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Protocol
+
+from .elasticity import ApiDescription, ServiceId
+from .slo import SLO
+from .telemetry import TimeSeriesDB
+
+
+class ServiceBackend(Protocol):
+    """What a container must expose to the platform (REST/Docker API stand-in)."""
+
+    def apply(self, param: str, value: float) -> None:
+        """Handle e.g. /quality?resolution=1080 — adjust live, no restart."""
+        ...
+
+    def metrics(self) -> Dict[str, float]:
+        """Current service+container metrics (scraped every 1 s)."""
+        ...
+
+
+@dataclasses.dataclass
+class ManagedService:
+    sid: ServiceId
+    api: ApiDescription
+    backend: ServiceBackend
+    slos: List[SLO]
+    assignment: Dict[str, float]  # last applied values
+
+
+class MUDAP:
+    """Registry + ScalingAPI + metric scraping for one device (host)."""
+
+    def __init__(self, capacity: Mapping[str, float], host: str = "edge-0"):
+        """capacity: global resource constraints C, e.g. {"cores": 8.0}."""
+        self.capacity = dict(capacity)
+        self.host = host
+        self.db = TimeSeriesDB()
+        self._services: Dict[str, ManagedService] = {}
+
+    # -- registry -----------------------------------------------------------
+    def register(self, sid: ServiceId, api: ApiDescription,
+                 backend: ServiceBackend, slos: List[SLO],
+                 assignment: Optional[Dict[str, float]] = None) -> None:
+        key = str(sid)
+        if key in self._services:
+            raise ValueError(f"service {key} already registered")
+        a = dict(assignment) if assignment else api.defaults()
+        svc = ManagedService(sid, api, backend, list(slos), {})
+        self._services[key] = svc
+        for p, v in a.items():
+            self.scale(key, p, v)
+
+    def deregister(self, sid: str) -> None:
+        self._services.pop(str(sid), None)
+
+    def services(self) -> List[str]:
+        return list(self._services)
+
+    def service(self, sid: str) -> ManagedService:
+        return self._services[str(sid)]
+
+    # -- ScalingAPI (Fig. 2 step 4) ------------------------------------------
+    def scale(self, sid: str, param: str, value: float) -> float:
+        """Apply one assignment; returns the actually-applied (clipped) value."""
+        svc = self._services[str(sid)]
+        p = svc.api.parameter(param)
+        v = p.clip(value)
+        if p.is_resource and param in self.capacity:
+            # clip to remaining global headroom (other services' shares held)
+            used = sum(o.assignment.get(param, 0.0)
+                       for k, o in self._services.items() if k != str(sid))
+            headroom = self.capacity[param] - used
+            v = p.clip(min(v, max(headroom, p.min_value)))
+        svc.backend.apply(param, v)
+        svc.assignment[param] = v
+        return v
+
+    def scale_all(self, assignments: Mapping[str, Mapping[str, float]]
+                  ) -> Dict[str, Dict[str, float]]:
+        applied: Dict[str, Dict[str, float]] = {}
+        for sid, a in assignments.items():
+            applied[sid] = {p: self.scale(sid, p, v) for p, v in a.items()}
+        return applied
+
+    def assignment(self, sid: str) -> Dict[str, float]:
+        return dict(self._services[str(sid)].assignment)
+
+    # -- metric scraping (Fig. 2 step 3) --------------------------------------
+    def scrape(self, t: float) -> None:
+        for key, svc in self._services.items():
+            self.db.scrape(key, t, svc.backend.metrics())
+
+    def window_state(self, sid: str, since: float,
+                     until: Optional[float] = None) -> Dict[str, float]:
+        """Stabilized state: windowed mean per §IV-A (last 5 s of the cycle)."""
+        return self.db.window_mean(str(sid), since, until)
+
+    def api_descriptions(self) -> Dict[str, ApiDescription]:
+        return {k: s.api for k, s in self._services.items()}
+
+    def reset_defaults(self) -> None:
+        """Paper §V-B(c): reset elasticity parameters between experimental runs
+        (resource params get an equal share C/|S|; others their half-range)."""
+        n = max(len(self._services), 1)
+        for key, svc in self._services.items():
+            for p in svc.api.parameters:
+                if p.is_resource and p.name in self.capacity:
+                    self.scale(key, p.name, 0.0)  # release first
+        for key, svc in self._services.items():
+            for p in svc.api.parameters:
+                if p.is_resource and p.name in self.capacity:
+                    self.scale(key, p.name, self.capacity[p.name] / n)
+                else:
+                    self.scale(key, p.name, p.default)

@@ -1,0 +1,213 @@
+"""RASK — Regression Analysis of Structural Knowledge (paper §IV, Algorithm 1).
+
+Per 10 s cycle the agent:
+  1. observes stabilized service states (windowed mean of the last 5 s, §IV-A)
+     and appends them to its training table D;
+  2. while rounds < xi: returns RAND_PARAM (Eq. 3) — uniform exploration
+     within bounds subject to the global constraint;
+  3. otherwise fits one polynomial regression per structural relation k in K
+     (Eq. 2, degree delta), hands the model W + SLOs Q + bounds P + constraint
+     C to the numerical solver (Eq. 4), warm-starting from the cached previous
+     assignment (§IV-B3), and
+  4. perturbs the solution with Gaussian action noise NOISE(a, eta) (Eq. 5)
+     before applying it through the MUDAP ScalingAPI.
+
+Beyond-paper extensions (all off by default, used in EXPERIMENTS.md §Perf):
+  * ``backend="pgd"`` — the vmapped multi-start JAX solver (core/solver.py);
+  * ``eta_decay`` — E1 observes "the noise should decay as the performance
+    converges"; eta_t = eta * decay**(rounds - xi);
+  * ``auto_degree`` — per-service polynomial degree selected by test-split MSE
+    (the E2/§VI-C2 recommendation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .platform import MUDAP
+from .regression import PolynomialModel, fit_polynomial, select_degree
+from .solver import ServiceSpec, SolverProblem, THROUGHPUT_MAX
+from .telemetry import TrainingTable
+
+# Structural knowledge K: per service, target -> feature parameter names.
+# E.g. {"tp_max": ("cores", "data_quality")} — Eq. (7).
+Knowledge = Mapping[str, Mapping[str, Sequence[str]]]
+
+
+@dataclasses.dataclass
+class RaskConfig:
+    xi: int = 20                # initial exploration rounds
+    eta: float = 0.0            # Gaussian action-noise ratio
+    delta: int = 2              # default polynomial degree
+    delta_per_service: Optional[Dict[str, int]] = None
+    backend: str = "slsqp"      # "slsqp" (paper) | "pgd" (beyond-paper)
+    cache: bool = True          # §IV-B3 warm-start from last assignment
+    ridge: float = 1e-6
+    eta_decay: float = 1.0      # beyond-paper: <1.0 decays noise after xi
+    auto_degree: bool = False   # beyond-paper: per-service degree by CV
+    auto_degree_every: int = 10
+    pgd_starts: int = 8
+    pgd_iters: int = 120
+    resource: str = "cores"     # the shared-capacity resource name
+
+
+@dataclasses.dataclass
+class CycleResult:
+    rounds: int
+    explored: bool
+    assignments: Dict[str, Dict[str, float]]
+    runtime_s: float            # fit + solve duration (E4/E5/E6 metric)
+    solver_score: float = float("nan")
+
+
+class RASKAgent:
+    """The action-perception loop of Fig. 3 bound to one MUDAP platform."""
+
+    def __init__(self, platform: MUDAP, knowledge: Knowledge,
+                 config: RaskConfig = RaskConfig(), seed: int = 0):
+        self.platform = platform
+        self.knowledge = knowledge
+        self.cfg = config
+        self.rng = np.random.default_rng(seed)
+        self.table = TrainingTable()
+        self.rounds = -1            # Algo 1 line 2: first cycle -> 0
+        self.services = platform.services()
+        self.capacity = platform.capacity[config.resource]
+        self._degrees: Dict[str, int] = {}
+        self._cached_x: Optional[np.ndarray] = None
+        self.problem = self._build_problem()
+        self.models: Dict[str, Dict[str, PolynomialModel]] = {}
+
+    # -- problem construction -------------------------------------------------
+    def _build_problem(self) -> SolverProblem:
+        specs = []
+        for sid in self.services:
+            svc = self.platform.service(sid)
+            api = svc.api
+            names = tuple(api.names)
+            rels = []
+            for target, feats in self.knowledge[svc.sid.type].items():
+                rels.append((target, tuple(names.index(f) for f in feats)))
+            specs.append(ServiceSpec(
+                name=sid,
+                param_names=names,
+                lower=tuple(p.min_value for p in api.parameters),
+                upper=tuple(p.max_value for p in api.parameters),
+                resource_mask=tuple(p.is_resource and p.name == self.cfg.resource
+                                    for p in api.parameters),
+                slos=tuple(svc.slos),
+                relation_features=tuple(rels)))
+        return SolverProblem(specs)
+
+    # -- observation (§IV-A) ---------------------------------------------------
+    def observe(self, t: float, window: float = 5.0) -> Dict[str, Dict[str, float]]:
+        """Append the stabilized state of each service to D; returns the states."""
+        states = {}
+        for sid in self.services:
+            state = self.platform.window_state(sid, since=t - window, until=t)
+            if not state:
+                continue
+            row = dict(state)
+            row.update(self.platform.assignment(sid))  # features = applied params
+            self.table.append(sid, row)
+            states[sid] = row
+        return states
+
+    # -- Algorithm 1 ------------------------------------------------------------
+    def cycle(self, t: float) -> CycleResult:
+        self.observe(t)
+        self.rounds += 1
+        if self.rounds < self.cfg.xi:                       # lines 3-5
+            a = self.problem.random_assignment(self.rng, self.capacity)
+            applied = self._apply(a)
+            return CycleResult(self.rounds, True, applied, 0.0)
+
+        t0 = time.perf_counter()
+        self._fit_models()                                  # lines 6-9
+        if not self._models_complete():
+            # not enough samples to fit every relation (e.g. xi=0 at cycle
+            # 1): keep exploring — there is no model to solve against yet
+            a = self.problem.random_assignment(self.rng, self.capacity)
+            return CycleResult(self.rounds, True, self._apply(a), 0.0)
+        rps = np.asarray([self._latest(sid, "rps", 0.0) for sid in self.services],
+                         np.float32)
+        x0 = (self._cached_x if (self.cfg.cache and self._cached_x is not None)
+              else self.problem.random_assignment(self.rng, self.capacity))
+        if self.cfg.backend == "pgd":
+            a, score = self.problem.solve_pgd(
+                self.models, rps, x0, self.capacity,
+                n_starts=self.cfg.pgd_starts, iters=self.cfg.pgd_iters,
+                seed=int(self.rng.integers(2 ** 31)))
+        else:
+            a, score = self.problem.solve_slsqp(self.models, rps, x0,
+                                                self.capacity)   # line 10
+        self._cached_x = np.asarray(a, np.float32)          # §IV-B3 cache
+        a = self._noise(a)                                  # line 11
+        runtime = time.perf_counter() - t0
+        applied = self._apply(a)
+        return CycleResult(self.rounds, False, applied, runtime, score)
+
+    def _models_complete(self) -> bool:
+        for sid in self.services:
+            svc = self.platform.service(sid)
+            for target in self.knowledge[svc.sid.type]:
+                if target not in self.models.get(sid, {}):
+                    return False
+        return True
+
+    # -- regression fitting (lines 6-9) -----------------------------------------
+    def _fit_models(self) -> None:
+        for sid in self.services:
+            svc = self.platform.service(sid)
+            k = self.knowledge[svc.sid.type]
+            self.models.setdefault(sid, {})
+            for target, feats in k.items():
+                X, Y = self.table.design_matrix(sid, feats, target)
+                if len(Y) < 3:
+                    continue
+                scale = np.asarray(
+                    [svc.api.parameter(f).max_value for f in feats], np.float32)
+                degree = self._degree(sid, X, Y, scale)
+                self.models[sid][target] = fit_polynomial(
+                    X, Y, degree, x_scale=scale, ridge=self.cfg.ridge,
+                    features=feats, target=target)
+
+    def _degree(self, sid: str, X, Y, scale) -> int:
+        if self.cfg.delta_per_service and sid in self.cfg.delta_per_service:
+            return self.cfg.delta_per_service[sid]
+        if self.cfg.auto_degree and len(Y) >= 10:
+            if (sid not in self._degrees
+                    or self.rounds % self.cfg.auto_degree_every == 0):
+                best, _ = select_degree(X, Y, x_scale=scale)
+                self._degrees[sid] = best
+            return self._degrees[sid]
+        return self.cfg.delta
+
+    # -- NOISE (Eq. 5) ------------------------------------------------------------
+    def _noise(self, a: np.ndarray) -> np.ndarray:
+        eta = self.cfg.eta * (self.cfg.eta_decay ** max(self.rounds - self.cfg.xi, 0))
+        if eta <= 0:
+            return a
+        # NOTE: Eq. (5) prints sigma=(a*eta)^2, but the paper's own worked
+        # example (a=4, eta=0.1 -> sigma=0.4) and the "relative noise" wording
+        # imply sigma = a*eta; we follow the example.
+        sigma = np.abs(a) * eta
+        return a + self.rng.normal(0.0, 1.0, a.shape).astype(np.float32) * sigma
+
+    # -- apply via ScalingAPI (§IV-C) -----------------------------------------------
+    def _apply(self, a: np.ndarray) -> Dict[str, Dict[str, float]]:
+        applied = {}
+        for i, spec in enumerate(self.problem.specs):
+            off = self.problem.offsets[i]
+            vals = {name: float(a[off + j])
+                    for j, name in enumerate(spec.param_names)}
+            applied[spec.name] = {p: self.platform.scale(spec.name, p, v)
+                                  for p, v in vals.items()}
+        return applied
+
+    def _latest(self, sid: str, metric: str, default: float) -> float:
+        s = self.platform.db.latest(sid)
+        return float(s.metrics.get(metric, default)) if s else default

@@ -1,0 +1,141 @@
+"""Polynomial regression of structural knowledge — paper Eq. (2).
+
+``w* (X, Y, delta) = argmin_w sum_i (y_i - w^T delta(x_i))^2``
+
+sklearn is deliberately not used: the feature expansion and the (ridge-
+regularized) least-squares solve are implemented on jnp so that
+
+* ``fit`` is jit-able, and
+* ``PolynomialModel.predict`` is *differentiable in x* — the numerical solver
+  (core/solver.py) backpropagates through the learned surfaces to find optimal
+  parameter assignments (Eq. 4).
+
+Terms are enumerated statically (all exponent tuples with total degree
+<= delta, like sklearn's PolynomialFeatures with bias) and the per-term
+product is unrolled in Python, which sidesteps the 0**0 autodiff singularity
+of ``jnp.power`` with array exponents.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def polynomial_exponents(n_features: int, degree: int) -> np.ndarray:
+    """All exponent tuples with 0 <= sum(e) <= degree, bias term first.
+
+    Shape (T, n_features); T = C(n_features + degree, degree).
+    """
+    terms = [e for e in itertools.product(range(degree + 1), repeat=n_features)
+             if sum(e) <= degree]
+    terms.sort(key=lambda e: (sum(e), tuple(-x for x in e)))
+    return np.asarray(terms, np.int32)
+
+
+def _expand(x, exponents: np.ndarray):
+    """delta(x): map (..., F) -> (..., T) polynomial features. Unrolled/static."""
+    cols = []
+    for term in exponents:
+        col = jnp.ones(x.shape[:-1], x.dtype)
+        for f, e in enumerate(term):
+            for _ in range(int(e)):
+                col = col * x[..., f]
+        cols.append(col)
+    return jnp.stack(cols, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("degree", "n_features"))
+def _fit(Xs, Y, degree: int, n_features: int, ridge):
+    exps = polynomial_exponents(n_features, degree)
+    Phi = _expand(Xs, exps)                                   # (N, T)
+    A = Phi.T @ Phi
+    # scale-aware ridge: constant feature columns (frozen elasticity dims)
+    # make A singular; regularize relative to its trace
+    lam = ridge * (1.0 + jnp.trace(A) / A.shape[0])
+    A = A + lam * jnp.eye(Phi.shape[1], dtype=Phi.dtype)
+    b = Phi.T @ Y
+    return jnp.linalg.solve(A, b)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PolynomialModel:
+    """A fitted w*(X, Y, delta) — one structural relation k in K."""
+
+    w: jnp.ndarray            # (T,)
+    exponents: np.ndarray     # (T, F) static
+    x_scale: np.ndarray       # (F,) static feature scaling for conditioning
+    degree: int
+    features: Tuple[str, ...] = ()
+    target: str = ""
+
+    def predict(self, x):
+        """Estimate the target for raw (unscaled) feature vector(s) x (..., F)."""
+        xs = jnp.asarray(x, jnp.float32) / jnp.asarray(self.x_scale, jnp.float32)
+        return _expand(xs, self.exponents) @ self.w
+
+    # pytree protocol: only w is a leaf so models can ride through jit/vmap.
+    def tree_flatten(self):
+        return (self.w,), (self.exponents.tobytes(), self.exponents.shape,
+                           self.x_scale.tobytes(), self.x_scale.shape,
+                           self.degree, self.features, self.target)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        eb, es, xb, xs_shape, degree, features, target = aux
+        return cls(leaves[0],
+                   np.frombuffer(eb, np.int32).reshape(es).copy(),
+                   np.frombuffer(xb, np.float32).reshape(xs_shape).copy(),
+                   degree, features, target)
+
+
+def fit_polynomial(X, Y, degree: int, x_scale: Optional[Sequence[float]] = None,
+                   ridge: float = 1e-6, features: Sequence[str] = (),
+                   target: str = "") -> PolynomialModel:
+    """Fit Eq. (2). ``x_scale`` (default: column max) conditions the expansion —
+    raw features like data_quality in [100, 1000] raised to delta=6 would
+    otherwise overflow float32."""
+    X = np.atleast_2d(np.asarray(X, np.float32))
+    Y = np.asarray(Y, np.float32).reshape(-1)
+    n = X.shape[1]
+    if x_scale is None:
+        x_scale = np.maximum(np.abs(X).max(axis=0), 1e-9)
+    x_scale = np.asarray(x_scale, np.float32)
+    w = _fit(jnp.asarray(X / x_scale), jnp.asarray(Y), degree, n,
+             jnp.float32(ridge))
+    return PolynomialModel(w, polynomial_exponents(n, degree), x_scale,
+                           degree, tuple(features), target)
+
+
+def mse(model: PolynomialModel, X, Y) -> float:
+    pred = model.predict(jnp.asarray(X, jnp.float32))
+    return float(jnp.mean((pred - jnp.asarray(Y, jnp.float32)) ** 2))
+
+
+def train_test_split(X, Y, test_frac: float = 0.2, seed: int = 0):
+    """Deterministic 80/20 split used by E2 (Table IV)."""
+    n = len(Y)
+    idx = np.random.default_rng(seed).permutation(n)
+    cut = max(1, int(round(n * test_frac)))
+    te, tr = idx[:cut], idx[cut:]
+    X = np.asarray(X)
+    Y = np.asarray(Y)
+    return X[tr], Y[tr], X[te], Y[te]
+
+
+def select_degree(X, Y, degrees: Sequence[int] = (1, 2, 3, 4, 5, 6),
+                  x_scale=None, seed: int = 0) -> Tuple[int, dict]:
+    """E2 / §VI-C2: pick the service-specific degree by test-split MSE."""
+    Xtr, Ytr, Xte, Yte = train_test_split(X, Y, seed=seed)
+    errs = {}
+    for d in degrees:
+        m = fit_polynomial(Xtr, Ytr, d, x_scale=x_scale)
+        errs[d] = mse(m, Xte, Yte)
+    best = min(errs, key=errs.get)
+    return best, errs

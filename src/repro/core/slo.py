@@ -1,0 +1,77 @@
+"""Service Level Objectives — paper §II-C1.
+
+Implements Eq. (1) fulfillment, Eq. (6) completion rate, and Eq. (8)
+globally-weighted fulfillment. Everything here is plain-python friendly *and*
+jnp-traceable so the numerical solver (core/solver.py) can differentiate
+through fulfillment terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """One SLO ``q``: keep ``metric`` >= ``target`` with importance ``weight``.
+
+    Matches paper Table II rows, e.g. SLO("data_quality", 800, 0.5) for QR, or
+    SLO("completion", 1.0, 1.0).
+    """
+
+    metric: str
+    target: float
+    weight: float = 1.0
+
+    def fulfillment(self, m):
+        """phi(q, m) — Eq. (1). Continuous in m, capped at 1 (no overfulfillment)."""
+        return jnp.minimum(jnp.asarray(m, jnp.float32) / self.target, 1.0)
+
+
+def fulfillment(metric_value, target):
+    """Functional form of Eq. (1) for ad-hoc use."""
+    return jnp.minimum(jnp.asarray(metric_value, jnp.float32) / target, 1.0)
+
+
+def completion(throughput, rps):
+    """Eq. (6): completion = throughput / RPS, the share of arriving work
+    finished, capped at 1 (transient queue drains can push raw tp above the
+    arrival rate). Guarded for rps == 0 (idle stream counts as complete).
+    """
+    rps = jnp.asarray(rps, jnp.float32)
+    tp = jnp.asarray(throughput, jnp.float32)
+    return jnp.where(rps > 0,
+                     jnp.minimum(tp / jnp.maximum(rps, 1e-9), 1.0), 1.0)
+
+
+def service_fulfillment(slos: Sequence[SLO], metrics: Mapping[str, float]):
+    """Weighted mean fulfillment of one service: sum(phi_j * w_j) / sum(w_j)."""
+    num = 0.0
+    den = 0.0
+    for q in slos:
+        num = num + q.fulfillment(metrics[q.metric]) * q.weight
+        den = den + q.weight
+    return num / den
+
+
+def global_fulfillment(per_service: Sequence[Mapping[str, float]],
+                       slo_sets: Sequence[Sequence[SLO]]):
+    """Eq. (8): mean over services of their weighted SLO fulfillment."""
+    assert len(per_service) == len(slo_sets)
+    total = 0.0
+    for metrics, slos in zip(per_service, slo_sets):
+        total = total + service_fulfillment(slos, metrics)
+    return total / max(len(per_service), 1)
+
+
+def violation_rate(history: Sequence[float], threshold: float = 1.0) -> float:
+    """Share of cycles whose global fulfillment fell below ``threshold``.
+
+    The paper reports "28% less SLO violations"; a violation is any cycle with
+    fulfillment < 1.0 (any SLO unmet at all).
+    """
+    if not history:
+        return 0.0
+    return float(sum(1 for f in history if float(f) < threshold)) / len(history)

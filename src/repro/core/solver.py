@@ -1,0 +1,229 @@
+"""Numerical solver for RASK's SOLVE step — paper Eq. (4).
+
+    SOLVE := max_A  sum_i sum_j  phi(q_j, p_i ^ w_i(p_i))
+             s.t.   sum_i p_i <= C_p          (global resource constraint)
+                    p_min <= p <= p_max       (per-parameter bounds)
+
+Two interchangeable backends:
+
+* ``solve_slsqp`` — the paper-faithful backend (scipy SLSQP [39], §V-A), with
+  jax-derived exact gradients and the §IV-B3 warm-start cache handled by the
+  caller (RASK passes the previous assignment as x0).
+
+* ``solve_pgd`` — the beyond-paper backend: projected-gradient ascent with K
+  random restarts, fully ``jit``/``vmap``-compiled. The paper's E4/E6 flag the
+  sequential solver as the scaling bottleneck ("poor parallelization of the
+  numerical solver"); this backend amortizes one compile across all cycles and
+  runs every restart in parallel. Projection onto the box/halfspace
+  intersection is exact (bisection on the KKT multiplier, i.e. water-filling).
+
+The objective is built *once* per problem structure; regression weights and
+per-service RPS are traced arguments, so RASK's per-cycle refits never trigger
+recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.optimize
+
+from .regression import PolynomialModel
+from .slo import SLO
+
+COMPLETION = "completion"
+THROUGHPUT_MAX = "tp_max"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """Static optimization view of one service (bounds, SLOs, relation shapes)."""
+
+    name: str
+    param_names: Tuple[str, ...]
+    lower: Tuple[float, ...]
+    upper: Tuple[float, ...]
+    resource_mask: Tuple[bool, ...]          # True -> counted against C
+    slos: Tuple[SLO, ...]
+    # target -> indices (into param_names) of the regression features
+    relation_features: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def n_params(self) -> int:
+        return len(self.param_names)
+
+
+class SolverProblem:
+    """Flattens |S| services into one decision vector and builds Eq. (4)."""
+
+    def __init__(self, specs: Sequence[ServiceSpec]):
+        self.specs = list(specs)
+        self.offsets: List[int] = []
+        off = 0
+        for s in self.specs:
+            self.offsets.append(off)
+            off += s.n_params
+        self.dim = off
+        self.lower = np.concatenate([np.asarray(s.lower, np.float32)
+                                     for s in self.specs])
+        self.upper = np.concatenate([np.asarray(s.upper, np.float32)
+                                     for s in self.specs])
+        mask = np.concatenate([np.asarray(s.resource_mask, bool)
+                               for s in self.specs])
+        self.resource_mask = mask
+        self._slsqp_vg = jax.jit(jax.value_and_grad(self._neg_objective))
+        self._pgd = None  # compiled lazily (static restart count / iters)
+
+    # -- objective ---------------------------------------------------------
+    def objective(self, a, models, rps):
+        """Weighted total SLO fulfillment (higher is better).
+
+        a:      (dim,) decision vector (raw parameter units)
+        models: {service: {target: PolynomialModel}} — pytree, traced weights
+        rps:    (|S|,) current request load per service
+        """
+        total = 0.0
+        for i, s in enumerate(self.specs):
+            p = jax.lax.dynamic_slice(a, (self.offsets[i],), (s.n_params,))
+            preds = {}
+            for target, feat_idx in s.relation_features:
+                x = jnp.stack([p[j] for j in feat_idx])
+                preds[target] = models[s.name][target].predict(x)
+            for q in s.slos:
+                if q.metric in s.param_names:
+                    value = p[s.param_names.index(q.metric)]
+                    phi = jnp.minimum(value / q.target, 1.0)
+                elif q.metric == COMPLETION:
+                    # §V-B(a): solver uses tp_max for the completion SLO —
+                    # completion_est = tp_max / RPS, phi capped at 1.
+                    tp = preds[THROUGHPUT_MAX]
+                    phi = jnp.minimum(tp / jnp.maximum(rps[i] * q.target, 1e-9),
+                                      1.0)
+                elif q.metric in preds:
+                    phi = jnp.minimum(preds[q.metric] / q.target, 1.0)
+                else:
+                    raise KeyError(
+                        f"SLO metric {q.metric!r} of service {s.name} is neither "
+                        f"a parameter nor a regression target")
+                total = total + q.weight * phi
+        return total
+
+    def _neg_objective(self, a, models, rps, capacity):
+        # soft-penalized constraint keeps SLSQP's line search informative even
+        # when the iterate is pushed outside the feasible region by noise.
+        res = jnp.sum(jnp.where(jnp.asarray(self.resource_mask), a, 0.0))
+        penalty = 1e3 * jnp.maximum(res - capacity, 0.0) ** 2
+        return -self.objective(a, models, rps) + penalty
+
+    # -- projection onto {box} ∩ {sum of resources <= C} --------------------
+    def project(self, a, capacity):
+        mask = jnp.asarray(self.resource_mask)
+        lo = jnp.asarray(self.lower)
+        hi = jnp.asarray(self.upper)
+        a = jnp.clip(a, lo, hi)
+
+        def body(_, lam_bounds):
+            lam_lo, lam_hi = lam_bounds
+            lam = 0.5 * (lam_lo + lam_hi)
+            tot = jnp.sum(jnp.where(mask, jnp.clip(a - lam, lo, hi), 0.0))
+            return jnp.where(tot > capacity, lam, lam_lo), \
+                jnp.where(tot > capacity, lam_hi, lam)
+
+        need = jnp.sum(jnp.where(mask, a, 0.0)) > capacity
+        lam_lo, lam_hi = jax.lax.fori_loop(
+            0, 50, body, (jnp.float32(0.0),
+                          jnp.max(jnp.where(mask, a - lo, 0.0)) + 1.0))
+        lam = jnp.where(need, 0.5 * (lam_lo + lam_hi), 0.0)
+        return jnp.where(mask, jnp.clip(a - lam, lo, hi), a)
+
+    # -- backend 1: paper-faithful SLSQP ------------------------------------
+    def solve_slsqp(self, models, rps, x0, capacity: float,
+                    maxiter: int = 100) -> Tuple[np.ndarray, float]:
+        rps = jnp.asarray(rps, jnp.float32)
+        cap = jnp.float32(capacity)
+        mask = self.resource_mask
+
+        def f(a):
+            v, g = self._slsqp_vg(jnp.asarray(a, jnp.float32), models, rps, cap)
+            return float(v), np.asarray(g, np.float64)
+
+        cons = [{"type": "ineq",
+                 "fun": lambda a: capacity - float(np.sum(a[mask])),
+                 "jac": lambda a: -mask.astype(np.float64)}]
+        res = scipy.optimize.minimize(
+            f, np.asarray(x0, np.float64), jac=True, method="SLSQP",
+            bounds=list(zip(self.lower.tolist(), self.upper.tolist())),
+            constraints=cons, options={"maxiter": maxiter, "ftol": 1e-6})
+        a = np.asarray(self.project(jnp.asarray(res.x, jnp.float32), cap))
+        return a, -float(res.fun)
+
+    # -- backend 2: beyond-paper vmapped multi-start PGD ---------------------
+    def _build_pgd(self, n_starts: int, iters: int, lr: float):
+        lo = jnp.asarray(self.lower)
+        hi = jnp.asarray(self.upper)
+
+        def one_start(a0, models, rps, capacity):
+            grad_fn = jax.grad(self.objective)
+
+            def step(carry, _):
+                a, m, v, t = carry
+                g = grad_fn(a, models, rps)
+                m = 0.9 * m + 0.1 * g
+                v = 0.999 * v + 0.001 * g * g
+                mh = m / (1 - 0.9 ** t)
+                vh = v / (1 - 0.999 ** t)
+                a = self.project(a + lr * (hi - lo) * mh /
+                                 (jnp.sqrt(vh) + 1e-8), capacity)
+                return (a, m, v, t + 1.0), None
+
+            init = (self.project(a0, capacity), jnp.zeros_like(a0),
+                    jnp.zeros_like(a0), jnp.float32(1.0))
+            (a, _, _, _), _ = jax.lax.scan(step, init, None, length=iters)
+            return a, self.objective(a, models, rps)
+
+        @partial(jax.jit, static_argnums=())
+        def run(x0, key, models, rps, capacity):
+            u = jax.random.uniform(key, (n_starts - 1, self.dim))
+            starts = jnp.concatenate(
+                [x0[None, :], lo[None, :] + u * (hi - lo)[None, :]], axis=0)
+            finals, scores = jax.vmap(
+                lambda s: one_start(s, models, rps, capacity))(starts)
+            # tie-break toward the warm start: the regression is only
+            # trustworthy near sampled configurations, so among (near-)equal
+            # model optima prefer the one closest to the validated operating
+            # point (the same stabilization E5 observes for caching).
+            dist = jnp.linalg.norm(
+                (finals - x0[None, :]) / jnp.maximum(hi - lo, 1e-6)[None, :],
+                axis=-1)
+            adj = jnp.where(jnp.isfinite(scores), scores - 1e-3 * dist,
+                            -jnp.inf)
+            best = jnp.argmax(adj)
+            # degenerate models can NaN every start: fall back to x0
+            ok = jnp.isfinite(scores[best]) \
+                & jnp.all(jnp.isfinite(finals[best]))
+            a = jnp.where(ok, finals[best], self.project(x0, capacity))
+            return a, jnp.where(ok, scores[best], jnp.float32(-jnp.inf))
+
+        return run
+
+    def solve_pgd(self, models, rps, x0, capacity: float, *,
+                  n_starts: int = 8, iters: int = 120, lr: float = 0.05,
+                  seed: int = 0) -> Tuple[np.ndarray, float]:
+        key = (n_starts, iters, lr)
+        if self._pgd is None or self._pgd[0] != key:
+            self._pgd = (key, self._build_pgd(n_starts, iters, lr))
+        run = self._pgd[1]
+        a, score = run(jnp.asarray(x0, jnp.float32),
+                       jax.random.PRNGKey(seed), models,
+                       jnp.asarray(rps, jnp.float32), jnp.float32(capacity))
+        return np.asarray(a), float(score)
+
+    # -- Eq. (3): RAND_PARAM — uniform draw within bounds + constraint -------
+    def random_assignment(self, rng: np.random.Generator,
+                          capacity: float) -> np.ndarray:
+        a = rng.uniform(self.lower, self.upper).astype(np.float32)
+        return np.asarray(self.project(jnp.asarray(a), jnp.float32(capacity)))

@@ -1,0 +1,99 @@
+"""In-process time-series DB — the Prometheus stand-in of paper §III-A/§IV-A.
+
+Containers are scraped every second; the agent queries a *window* of the most
+recent samples and aggregates (the paper averages the last 5 s of each 10 s
+cycle, because scaling actions take up to ~5 s to settle). The DB also serves
+as the regression training-data store D: ``training_table`` flattens the
+windowed aggregates of each past cycle into the tabular structure RASK fits
+its polynomials on (Fig. 3 step 1).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Sample:
+    t: float
+    metrics: Dict[str, float]
+
+
+class TimeSeriesDB:
+    """Append-only per-service metric store with windowed aggregation.
+
+    Thread-safe: the scrape loop and the agent may run concurrently
+    (MUDAP scrapes each container every 1 s; the agent reads every 10 s).
+    """
+
+    def __init__(self, retention: int = 100_000):
+        self._series: Dict[str, collections.deque] = {}
+        self._retention = retention
+        self._lock = threading.Lock()
+
+    def scrape(self, service: str, t: float, metrics: Mapping[str, float]) -> None:
+        with self._lock:
+            q = self._series.setdefault(
+                service, collections.deque(maxlen=self._retention))
+            q.append(Sample(float(t), dict(metrics)))
+
+    def services(self) -> List[str]:
+        with self._lock:
+            return list(self._series)
+
+    def latest(self, service: str) -> Optional[Sample]:
+        with self._lock:
+            q = self._series.get(service)
+            return q[-1] if q else None
+
+    def window(self, service: str, since: float, until: Optional[float] = None
+               ) -> List[Sample]:
+        with self._lock:
+            q = self._series.get(service, ())
+            return [s for s in q
+                    if s.t >= since and (until is None or s.t <= until)]
+
+    def window_mean(self, service: str, since: float,
+                    until: Optional[float] = None) -> Dict[str, float]:
+        """Average each metric over [since, until] — paper §IV-A: 'query a time
+        series of the remaining 5s and consider the average'."""
+        samples = self.window(service, since, until)
+        if not samples:
+            return {}
+        keys = set().union(*(s.metrics.keys() for s in samples))
+        return {k: float(np.mean([s.metrics[k] for s in samples if k in s.metrics]))
+                for k in keys}
+
+
+class TrainingTable:
+    """The tabular structure D of Fig. 3 — one row per (cycle, service).
+
+    Each row holds the *stabilized* metric aggregate of one autoscaling cycle
+    so the regression sees (features X, target Y) pairs at cycle granularity.
+    """
+
+    def __init__(self):
+        self._rows: Dict[str, List[Dict[str, float]]] = {}
+
+    def append(self, service: str, row: Mapping[str, float]) -> None:
+        self._rows.setdefault(service, []).append(dict(row))
+
+    def rows(self, service: str) -> List[Dict[str, float]]:
+        return self._rows.get(service, [])
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._rows.values())
+
+    def design_matrix(self, service: str, features: Sequence[str], target: str):
+        """Extract (X, Y) for one structural relation k — Algo 1 line 7."""
+        rows = [r for r in self.rows(service)
+                if target in r and all(f in r for f in features)]
+        if not rows:
+            return np.zeros((0, len(features)), np.float32), np.zeros((0,), np.float32)
+        X = np.asarray([[r[f] for f in features] for r in rows], np.float32)
+        Y = np.asarray([r[target] for r in rows], np.float32)
+        return X, Y

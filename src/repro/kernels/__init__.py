@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (+ ops wrappers and pure-jnp oracles).
+
+Hot spots only (the paper's algorithm is not kernel-level; these serve the
+LM substrate): flash attention (prefill), GQA decode attention, Mamba2 SSD
+chunked scan. Each kernel has a BlockSpec-tiled pl.pallas_call, a jit'd
+wrapper in ops.py, and an oracle in ref.py; tests sweep shapes/dtypes in
+interpret mode.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

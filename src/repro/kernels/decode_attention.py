@@ -1,0 +1,107 @@
+"""Pallas TPU decode attention — one new token against a long KV cache.
+
+Decode is memory-bound: the kernel's job is to stream the (S, KH, D) cache
+through VMEM exactly once at full HBM bandwidth while the tiny (G, D) query
+tile stays resident. Grid: (B, KH, ns) with the sequence-block axis
+innermost; online-softmax scratch (acc/m/l) carries across blocks, exactly
+like flash attention but with q fixed to the G query heads of one kv group.
+
+``length``/``start`` arrive as (1,1) i32 operands (traced — they change
+every step; recompiling per position would be absurd). Blocks wholly outside
+[start, length) still stream (baseline; skipping them via the grid is a
+§Perf iteration recorded in EXPERIMENTS.md).
+
+Oracle: kernels/ref.py::decode_attention_reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _da_kernel(len_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, scale: float, block_s: int,
+               ns: int):
+    isb = pl.program_id(2)
+    length = len_ref[0, 0]
+    start = start_ref[0, 0]
+
+    @pl.when(isb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                    # (G, D)
+    k = k_ref[0]                                       # (bs, 1, D) -> (bs, D)
+    k = k.reshape(k.shape[0], k.shape[-1])
+    v = v_ref[0].reshape(k.shape)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = isb * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)                    # (1, bs)
+    mask = (pos < length) & (pos >= start)             # (1, bs)
+    s = jnp.where(mask, s, NEG_INF)                    # (G, bs)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(isb == ns - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, length, start=0, *,
+                            block_s: int = 512, interpret: bool = False):
+    """q: (B, H, D); caches: (B, S, KH, D); attend to slots [start, length).
+
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+    qg = q.reshape(B, KH, G, D)
+    len_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1, 1))
+    start_arr = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (1, 1))
+
+    kernel = functools.partial(_da_kernel, scale=D ** -0.5, block_s=bs,
+                               ns=ns)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, isb: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, isb: (0, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, isb: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, isb: (b, isb, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, isb: (b, isb, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, isb: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_arr, start_arr, qg, k_cache, v_cache)
+    return out.reshape(B, H, D)

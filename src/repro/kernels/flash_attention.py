@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (prefill) — tiled online-softmax.
+
+Grid: (B, H, nq, nk) with the kv-block axis innermost so the scratch
+accumulators (acc/m/l in VMEM, f32) carry across kv blocks of one q tile.
+GQA is handled in the index maps: query head h reads kv head h // G.
+
+BlockSpec tiling targets the TPU memory hierarchy: q/k/v/o tiles of
+(block_q|block_k, d_head) stay in VMEM; the (block_q, block_k) score tile
+lives in registers/VMEM only — the (S, T) score matrix never exists. MXU
+alignment: block sizes default to 128 and d_head is expected to be a
+multiple of 8 (128 for every assigned arch except whisper's 64).
+
+Oracle: kernels/ref.py::flash_attention_reference (tests sweep shapes/dtypes
+in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int, block_q: int,
+               block_k: int, S: int, T: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                   # (bq, d)
+    k = k_ref[0, 0]                                   # (bk, d)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0) \
+        + (T - S)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, KH, T, D). Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KH, T = k.shape[1], k.shape[2]
+    G = H // KH
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=D ** -0.5, causal=causal, window=window,
+        block_q=bq, block_k=bk, S=S, T=T, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max m
+            pltpu.VMEM((bq,), jnp.float32),     # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

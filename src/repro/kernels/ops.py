@@ -1,0 +1,56 @@
+"""Public jit'd wrappers around the Pallas kernels with reference fallback.
+
+Call sites pick the implementation:
+  * ``impl="reference"``         — pure-jnp oracle (XLA; used by the dry-run)
+  * ``impl="pallas"``            — compiled Pallas TPU kernel (target hardware)
+  * ``impl="pallas_interpret"``  — Pallas interpret mode (CPU validation)
+
+The ``interpret`` boolean shorthand maps True -> pallas_interpret.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from . import ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "pallas", interpret: bool = False):
+    """q: (B,H,S,D); k,v: (B,KH,T,D). Tiled online-softmax attention."""
+    if impl == "reference":
+        return ref.flash_attention_reference(q, k, v, causal=causal,
+                                             window=window)
+    from .flash_attention import flash_attention_pallas
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        interpret=interpret or impl == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, start=0, *,
+                     impl: str = "pallas", interpret: bool = False):
+    """q: (B,H,D) one new token; caches: (B,S,KH,D); attend to [start, length)."""
+    if impl == "reference":
+        return ref.decode_attention_reference(q, k_cache, v_cache, length,
+                                              start=start)
+    from .decode_attention import decode_attention_pallas
+    return decode_attention_pallas(
+        q, k_cache, v_cache, length, start,
+        interpret=interpret or impl == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, initial_state=None,
+        impl: str = "pallas", interpret: bool = False):
+    """Mamba2 chunked SSD scan. See ref.ssd_reference for shapes."""
+    if impl == "reference":
+        return ref.ssd_reference(x, dt, A, B, C, chunk=chunk,
+                                 initial_state=initial_state)
+    from .ssd_scan import ssd_pallas
+    return ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                      initial_state=initial_state,
+                      interpret=interpret or impl == "pallas_interpret")

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for the Mamba2 chunked SSD scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the GPU version
+leans on warp-level scans; on TPU we restructure it as chunked *matmuls*
+(MXU-friendly) with the inter-chunk recurrence carried in a VMEM scratch
+state — the grid's chunk axis is innermost-sequential, so the (P, N) state
+tile never leaves VMEM between chunks.
+
+Grid: (B, H, nc). Per (b, h) the kernel walks chunks left to right:
+  1. intra-chunk: Y_diag = ((C B^T) ∘ L) (x·dt)       — (c x c) matmuls
+  2. carry-out:   S_c   = (B · decay)^T (x·dt)        — rank-N update
+  3. carry-in:    Y_off = C S_prev^T ∘ exp(dA_cs)
+  4. state update: S_prev <- S_prev * exp(dA_sum) + S_c
+
+Oracle: kernels/ref.py::ssd_reference (which itself matches the paper's
+Listing 1); decode recurrence stays in pure jnp (ssd_decode_reference).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+                y_ref, fin_ref, state_ref, *, chunk: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :]                              # (c, P)
+    dt = dt_ref[0, :, 0]                               # (c,)
+    A = a_ref[0]                                       # scalar
+    Bm = b_ref[0]                                      # (c, N)
+    Cm = c_ref[0]                                      # (c, N)
+
+    dA = dt * A                                        # (c,)
+    dA_cs = jnp.cumsum(dA)                             # (c,)
+    xd = x * dt[:, None]                               # (c, P)
+
+    # 1. intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)         # (c, c)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    y = jax.lax.dot_general((cb * L).astype(xd.dtype), xd,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (c, P)
+
+    # 3. carry-in from previous chunks
+    state = state_ref[...]                             # (P, N)
+    y_off = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (c, P)
+    y = y + y_off * jnp.exp(dA_cs)[:, None]
+
+    # 2./4. carry-out + state update
+    decay_states = jnp.exp(dA_cs[-1] - dA_cs)          # (c,)
+    s_new = jax.lax.dot_general(
+        (xd * decay_states[:, None]), Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (P, N)
+    state_ref[...] = state * jnp.exp(dA_cs[-1]) + s_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _fin():
+        fin_ref[0, 0] = state_ref[...].astype(fin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A, B, C, *, chunk: int = 128, initial_state=None,
+               interpret: bool = False):
+    """See ref.ssd_reference for shapes: x (b,l,h,p), dt (b,l,h), A (h,),
+    B/C (b,l,n). Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    ck = min(chunk, l)
+    assert l % ck == 0, (l, ck)
+    nc = l // ck
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+
+    kernel = functools.partial(_ssd_kernel, chunk=ck, nc=nc)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, ck, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, ck, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, ck, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, ck, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ck, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, initial_state)
+    return y, fin

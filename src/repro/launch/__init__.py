@@ -1,0 +1,9 @@
+# NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time and
+# must only run as a standalone entry point (python -m repro.launch.dryrun).
+from .mesh import batch_axes, make_debug_mesh, make_production_mesh
+from .steps import (StepBundle, abstract_params, make_decode_step,
+                    make_prefill_step, make_train_step)
+
+__all__ = ["batch_axes", "make_debug_mesh", "make_production_mesh",
+           "StepBundle", "abstract_params", "make_decode_step",
+           "make_prefill_step", "make_train_step"]

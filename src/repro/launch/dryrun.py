@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices. Do not
+import this module from tests (they should see 1 device).
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the step (train_step / prefill / serve_step) with the sharding
+     rules of launch/sharding.py,
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(*specs).compile()``,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     parsed out of the optimized HLO, and the roofline terms
+     (EXPERIMENTS.md §Roofline), into benchmarks/artifacts/dryrun/.
+
+Any sharding mismatch, OOM-at-compile or unsupported collective is a bug in
+the framework and fails the cell.
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from ..configs import SHAPES, cells, config_for_shape, get   # noqa: E402
+from ..models.config import ModelConfig                      # noqa: E402
+from . import hlo_cost                                       # noqa: E402
+from . import sharding as SH                                 # noqa: E402
+from .mesh import make_production_mesh                       # noqa: E402
+from .steps import (StepBundle, make_decode_step,            # noqa: E402
+                    make_prefill_step, make_train_step)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" \
+    / "dryrun"
+
+# TPU v5e per-chip constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N per token (decode),
+    with N = active params."""
+    n = cfg.n_params_active()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        if cfg.family == "encdec":
+            tokens = shape.seq_len * shape.global_batch  # encoder dominates
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    # decode: one token per sequence + attention reads (not in 2N heuristic)
+    return 2.0 * n * shape.global_batch
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    compile_s: float
+    per_device_flops: float
+    per_device_bytes: float
+    collective_bytes_per_device: float
+    collectives: dict
+    collective_counts: dict
+    memory: dict
+    arg_bytes_per_device: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_frac: float
+    skip: str = ""
+
+
+def default_knobs(cfg: ModelConfig) -> dict:
+    """Baseline remat/microbatch settings by model size (overridable)."""
+    n = cfg.n_params()
+    if n >= 60e9:
+        return {"remat": "full", "microbatches": 16}
+    if n >= 10e9:
+        return {"remat": "full", "microbatches": 8}
+    return {"remat": "dots", "microbatches": 1}
+
+
+def run_cell(cfg: ModelConfig, shape, mesh, mesh_name: str, *,
+             fsdp: bool = True, remat: str = None,
+             microbatches: int = None, save_hlo: bool = False) -> CellResult:
+    knobs = default_knobs(cfg)
+    remat = remat or knobs["remat"]
+    if microbatches is None:
+        # per-microbatch batch must divide the batch-shard product, else the
+        # pod axis idles (found via the multi-pod scaling check, §Dry-run)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        shards = sizes.get("pod", 1) * sizes.get("data", 1)
+        microbatches = min(knobs["microbatches"],
+                           max(shape.global_batch // shards, 1))
+    if shape.kind != "train":
+        remat = "none"   # no backward pass -> checkpoint wrappers only slow
+        #                  down SPMD partitioning (measured: minutes vs secs)
+    cfg = dataclasses.replace(cfg, attn_impl="reference",
+                              ssm_impl="reference", remat=remat)
+    n_dev = mesh.devices.size
+    if shape.kind == "train":
+        bundle = make_train_step(cfg, mesh, shape.global_batch, shape.seq_len,
+                                 fsdp=fsdp, microbatches=microbatches)
+    elif shape.kind == "prefill":
+        bundle = make_prefill_step(cfg, mesh, shape.global_batch,
+                                   shape.seq_len, fsdp=fsdp)
+    else:
+        bundle = make_decode_step(cfg, mesh, shape.global_batch,
+                                  shape.seq_len, fsdp=fsdp)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    memory = {}
+    if ma is not None:
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes"):
+            memory[f] = int(getattr(ma, f, 0))
+
+    hlo = compiled.as_text()
+    # NOTE: XLA:CPU cost_analysis counts while-loop bodies once (verified in
+    # tests/test_hlo_cost.py); hlo_cost re-derives trip-scaled per-device
+    # totals from the optimized HLO. Raw cost_analysis kept for reference.
+    hc = hlo_cost.analyze(hlo)
+    flops = float(hc["flops"])                       # per-device, trip-scaled
+    bytes_accessed = float(hc["bytes"])
+    coll = hc["collectives"]
+    counts = hc["collective_counts"]
+    coll_total = float(hc["collective_bytes"])
+    memory["xla_cost_analysis_flops"] = float(ca.get("flops", 0.0))
+    memory["xla_cost_analysis_bytes"] = float(ca.get("bytes accessed", 0.0))
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops * n_dev) if flops else 0.0
+
+    arg_bytes = SH.sharded_size_bytes(
+        jax.tree.leaves(bundle.args),
+        jax.tree.leaves(bundle.in_shardings)) if bundle.in_shardings else 0
+
+    res = CellResult(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name,
+        compile_s=round(compile_s, 1),
+        per_device_flops=flops, per_device_bytes=bytes_accessed,
+        collective_bytes_per_device=coll_total,
+        collectives=coll, collective_counts=counts, memory=memory,
+        arg_bytes_per_device=int(arg_bytes),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf,
+        useful_flops_frac=round(useful, 4))
+    if save_hlo:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / f"{cfg.name}_{shape.name}_{mesh_name}.hlo.txt"
+         ).write_text(hlo)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes or not args.multi_pod:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.both_meshes or args.multi_pod:
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    todo = []
+    if args.all:
+        todo = [(c, s) for c, s, skip in cells() if skip is None]
+    else:
+        cfg = get(args.arch)
+        shape = SHAPES[args.shape]
+        todo = [(config_for_shape(cfg, shape), shape)]
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    results = []
+    for cfg, shape in todo:
+        for mesh_name, mesh in meshes:
+            tag = f"{cfg.name} x {shape.name} x {mesh_name}"
+            if args.skip_existing and (
+                    ARTIFACTS / f"{cfg.name}_{shape.name}_{mesh_name}.json"
+            ).exists():
+                print(f"SKIP {tag} (cached)", flush=True)
+                continue
+            try:
+                r = run_cell(cfg, shape, mesh, mesh_name,
+                             fsdp=bool(args.fsdp), remat=args.remat,
+                             microbatches=args.microbatches,
+                             save_hlo=args.save_hlo)
+            except Exception as e:  # a failing cell is a bug — surface it
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                raise
+            results.append(dataclasses.asdict(r))
+            print(f"OK {tag}: compile={r.compile_s}s "
+                  f"flops/dev={r.per_device_flops:.3e} "
+                  f"bytes/dev={r.per_device_bytes:.3e} "
+                  f"coll/dev={r.collective_bytes_per_device:.3e} "
+                  f"bottleneck={r.bottleneck} "
+                  f"useful={r.useful_flops_frac}")
+            out = args.out or (ARTIFACTS / f"{cfg.name}_{shape.name}_"
+                               f"{mesh_name}.json")
+            Path(out).write_text(json.dumps(dataclasses.asdict(r), indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    main()

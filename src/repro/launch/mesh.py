@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis composes
+with ``data`` for batch sharding and carries the cross-pod (DCN-ish) gradient
+reduction.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    except TypeError:                      # older jax without axis_types
+        return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    try:
+        auto = (jax.sharding.AxisType.Auto,) * 2
+        return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    except TypeError:
+        return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes a global-batch dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

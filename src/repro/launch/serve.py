@@ -1,0 +1,56 @@
+"""Serving driver: a smoke-config model behind the continuous-batching
+engine, fed batched synthetic requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --requests 24
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get
+from ..models import build
+from ..serve.engine import EngineConfig, Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch).smoke()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, EngineConfig(
+        slots=args.slots, max_seq=args.prompt_len + args.max_new + 8,
+        context=args.prompt_len, chips=4.0))
+
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            rid, rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new))
+
+    t0 = time.perf_counter()
+    ticks = 0
+    while len(engine.completed) < args.requests and ticks < 10_000:
+        engine.step()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    print(f"completed {len(engine.completed)}/{args.requests} requests in "
+          f"{ticks} engine steps, {dt:.1f}s; tokens_out={engine.tokens_out} "
+          f"({engine.tokens_out / max(dt, 1e-9):.1f} tok/s)")
+    return engine
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Step builders: the jittable train_step / serve_step for any arch config,
+plus the spec plumbing the dry-run and the real drivers share.
+
+``make_train_step`` returns (step_fn, abstract input specs, in/out shardings)
+— the exact object the dry-run lowers and the trainer executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import build
+from ..models.config import ModelConfig
+from ..models.model import input_specs
+from ..train.optimizer import AdamWConfig, adamw, compressed_adamw
+from . import sharding as SH
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                       # the step callable
+    args: Tuple                   # abstract args (ShapeDtypeStructs)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple = ()
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def make_train_step(cfg: ModelConfig, mesh, batch: int = 256,
+                    seq: int = 4096, *, fsdp: bool = True,
+                    compressed_grads: bool = False,
+                    microbatches: int = 1,
+                    opt_cfg: AdamWConfig = AdamWConfig()) -> StepBundle:
+    """Full train step: microbatched grad accumulation (scan) + AdamW.
+
+    With microbatches=M the batch inputs arrive as (M, B/M, ...) — activation
+    memory scales with B/M while the gradient all-reduce still happens once
+    per step (the standard large-model recipe; M is a §Perf knob).
+    """
+    model = build(cfg)
+    opt_init, opt_update = (compressed_adamw if compressed_grads
+                            else adamw)(opt_cfg)
+    loss_grad = jax.value_and_grad(model.loss, has_aux=True)
+    p_shapes_early = abstract_params(cfg)
+    grad_shard = SH.params_shardings(p_shapes_early, mesh, fsdp=fsdp)
+
+    def constrain(tree):
+        # keep gradients sharded like their parameters (ZeRO): without this
+        # XLA materializes *replicated* f32 weight grads inside the
+        # microbatch scan — one full-size all-reduce per layer per microbatch
+        # (measured: 5.7x the collective term on qwen3 train; §Perf P1)
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shard)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = loss_grad(params, batch)
+            grads = constrain(grads)
+        else:
+            def mb_step(carry, mb):
+                gsum, lsum, asum = carry
+                (l, m), g = loss_grad(params, mb)
+                gsum = constrain(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g))
+                return (gsum, lsum + l, asum + m["aux"]), None
+
+            gsum0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                mb_step, (gsum0, jnp.float32(0.0), jnp.float32(0.0)), batch)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"ce": loss, "aux": asum / microbatches}
+        new_params, new_opt, opt_metrics = opt_update(grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_params, new_opt, metrics
+
+    p_shapes = p_shapes_early
+    o_shapes = jax.eval_shape(opt_init, p_shapes)
+    b_shapes = input_specs(cfg, "train", batch=batch, seq=seq)
+    if microbatches > 1:
+        assert batch % microbatches == 0, (batch, microbatches)
+        b_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (microbatches, s.shape[0] // microbatches) + s.shape[1:],
+                s.dtype), b_shapes)
+
+    p_shard = SH.params_shardings(p_shapes, mesh, fsdp=fsdp)
+    o_shard = _opt_shardings(o_shapes, p_shard, mesh)
+    b_shard = SH.batch_shardings(b_shapes, mesh,
+                                 dim=1 if microbatches > 1 else 0)
+    m_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                           jax.eval_shape(train_step, p_shapes, o_shapes,
+                                          b_shapes)[2])
+    return StepBundle(
+        fn=train_step,
+        args=(p_shapes, o_shapes, b_shapes),
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, m_shard),
+        donate_argnums=(0, 1))
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, batch: int, seq: int,
+                      fsdp: bool = True) -> StepBundle:
+    model = build(cfg)
+
+    def prefill_step(params, batch_in):
+        logits, cache = model.prefill(params, batch_in, max_seq=seq)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    p_shapes = abstract_params(cfg)
+    b_shapes = input_specs(cfg, "prefill", batch=batch, seq=seq)
+    p_shard = SH.params_shardings(p_shapes, mesh, fsdp=fsdp)
+    b_shard = SH.batch_shardings(b_shapes, mesh)
+    out_shapes = jax.eval_shape(prefill_step, p_shapes, b_shapes)
+    tok_shard = SH.batch_shardings(out_shapes[0], mesh)
+    cache_shard = SH.cache_shardings(out_shapes[1], mesh)
+    return StepBundle(prefill_step, (p_shapes, b_shapes),
+                      (p_shard, b_shard), (tok_shard, cache_shard))
+
+
+def make_decode_step(cfg: ModelConfig, mesh, batch: int, seq: int,
+                     fsdp: bool = True) -> StepBundle:
+    model = build(cfg)
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode(params, tokens, cache)
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, cache
+
+    p_shapes = abstract_params(cfg)
+    specs = input_specs(cfg, "decode", batch=batch, seq=seq)
+    t_shapes, c_shapes = specs["tokens"], specs["cache"]
+    p_shard = SH.params_shardings(p_shapes, mesh, fsdp=fsdp)
+    t_shard = SH.batch_shardings(t_shapes, mesh)
+    c_shard = SH.cache_shardings(c_shapes, mesh)
+    out_shapes = jax.eval_shape(serve_step, p_shapes, t_shapes, c_shapes)
+    o_c_shard = SH.cache_shardings(out_shapes[1], mesh)
+    return StepBundle(serve_step, (p_shapes, t_shapes, c_shapes),
+                      (p_shard, t_shard, c_shard),
+                      (t_shard, o_c_shard), donate_argnums=(2,))
+
+
+def _opt_shardings(opt_shapes, param_shardings, mesh):
+    """Optimizer moments shard exactly like their parameters (ZeRO-style);
+    scalars (step) replicate. Works for AdamWState and CompressedState."""
+    rep = NamedSharding(mesh, P())
+    p_leaves, p_def = jax.tree_util.tree_flatten(param_shardings)
+
+    def rec(node):
+        if hasattr(node, "_fields"):       # NamedTuple states — recurse fields
+            return type(node)(*[rec(getattr(node, f)) for f in node._fields])
+        leaves, tdef = jax.tree_util.tree_flatten(node)
+        if tdef == p_def:                  # a params-shaped subtree
+            return jax.tree_util.tree_unflatten(tdef, p_leaves)
+        return jax.tree.map(lambda _: rep, node)
+
+    return rec(opt_shapes)

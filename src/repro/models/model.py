@@ -1,0 +1,150 @@
+"""Model facade: one uniform interface over all family programs.
+
+``build(cfg)`` returns a ``Model`` with:
+  init(key) -> params
+  loss(params, batch) -> (scalar, metrics)          # teacher-forced CE
+  prefill(params, batch, max_seq) -> (logits, cache)
+  decode(params, tokens, cache) -> (logits, cache)
+  init_cache(batch, max_seq) -> zeroed cache pytree
+
+``input_specs(cfg, shape_kind, batch, seq)`` produces ShapeDtypeStruct
+stand-ins for every input of the corresponding step function — the dry-run
+lowers against these (weak-type-correct, shardable, no device allocation).
+
+Whisper (encdec) convention: ``seq`` is the encoder frame count; the decoder
+sees seq//8 teacher-forcing tokens at train time and a 448-token cache at
+decode time (the modality frontend is a stub per the assignment — inputs are
+precomputed frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+DEC_LEN = 448            # whisper decoder max tokens
+ENCDEC_DEC_FRac = 8      # train: decoder tokens = frames // 8
+
+
+def _xent(logits, labels):
+    """Mean CE in f32; logits (B,S,V), labels (B,S) int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> Params:
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return T.init_decoder(key, self.cfg)
+        if f == "ssm":
+            return T.init_ssm(key, self.cfg)
+        if f == "hybrid":
+            return T.init_hybrid(key, self.cfg)
+        if f == "encdec":
+            return T.init_encdec(key, self.cfg)
+        raise ValueError(f)
+
+    # -- teacher-forced loss ----------------------------------------------------
+    def loss(self, params: Params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, aux, _ = T.encdec_forward(params, cfg, batch["frames"],
+                                              batch["tokens"])
+        elif cfg.family == "ssm":
+            logits, aux, _ = T.ssm_forward(params, cfg, batch["tokens"])
+        elif cfg.family == "hybrid":
+            logits, aux, _ = T.hybrid_forward(params, cfg, batch["tokens"])
+        else:
+            logits, aux, _ = T.decoder_forward(params, cfg, batch["tokens"])
+        ce = _xent(logits, batch["labels"])
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- serving ------------------------------------------------------------------
+    def prefill(self, params: Params, batch, max_seq: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return T.encdec_prefill(params, cfg, batch["frames"],
+                                    batch["tokens"], dec_len=DEC_LEN)
+        if cfg.family == "ssm":
+            return T.ssm_prefill(params, cfg, batch["tokens"], max_seq)
+        if cfg.family == "hybrid":
+            return T.hybrid_prefill(params, cfg, batch["tokens"], max_seq)
+        return T.decoder_prefill(params, cfg, batch["tokens"], max_seq)
+
+    def decode(self, params: Params, tokens, cache):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return T.encdec_decode(params, cfg, tokens, cache)
+        if cfg.family == "ssm":
+            return T.ssm_decode(params, cfg, tokens, cache)
+        if cfg.family == "hybrid":
+            return T.hybrid_decode(params, cfg, tokens, cache)
+        if cfg.mixed_cache and cfg.local_global_period:
+            return T.decoder_decode_mixed(params, cfg, tokens, cache)
+        return T.decoder_decode(params, cfg, tokens, cache)
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return T.encdec_init_cache(cfg, batch, max_seq, dec_len=DEC_LEN)
+        if cfg.family == "ssm":
+            return T.ssm_init_cache(cfg, batch, max_seq)
+        if cfg.family == "hybrid":
+            return T.hybrid_init_cache(cfg, batch, max_seq)
+        if cfg.mixed_cache and cfg.local_global_period:
+            return T.decoder_init_cache_mixed(cfg, batch, max_seq)
+        return T.decoder_init_cache(cfg, batch, max_seq)
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# -- dry-run input specs -------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, kind: str, batch: int, seq: int
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of ``kind``:
+
+    kind = "train"   -> {tokens, labels [, frames]}
+    kind = "prefill" -> {tokens [, frames]}
+    kind = "decode"  -> {tokens, cache}   (cache sized for a seq-long context)
+    """
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    model = build(cfg)
+    if kind == "train":
+        if cfg.family == "encdec":
+            sd = max(seq // ENCDEC_DEC_FRac, 8)
+            return {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((batch, sd), i32),
+                    "labels": jax.ShapeDtypeStruct((batch, sd), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((batch, 8), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if kind == "decode":
+        cache = model.cache_specs(batch, seq)
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32),
+                "cache": cache}
+    raise ValueError(kind)

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN — GShard-style dense dispatch (TPU/SPMD friendly).
+
+Routing uses capacity-bounded einsum dispatch: tokens are assigned to their
+top-k experts, each expert processes at most C = ceil(T*k/E * cf) tokens, and
+overflow tokens are dropped (their residual passes through). Everything is
+dense linear algebra — ``jnp.einsum`` over (tokens, experts, capacity) — so
+XLA SPMD shards experts over the ``model`` mesh axis (expert parallelism)
+without custom collectives.
+
+Supports DBRX (16e top-4), Qwen2-MoE (60e top-4 + 4 shared experts fused into
+one wide always-on expert), and Jamba (16e top-2, applied every other layer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import activation, init_linear, init_mlp, linear, mlp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32)
+                   * scale).astype(jnp.float32),   # router math stays f32
+        "up": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+               * scale).astype(dtype),
+        "gate": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                 * (f ** -0.5)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, dtype,
+                               d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def moe(p: Params, x, cfg: ModelConfig, capacity_factor: float = 1.25,
+        group_size: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Group-wise GShard dispatch.
+
+    Tokens are routed within *groups* of <= ``group_size`` tokens. The
+    dispatch/combine one-hots are (G, Tg, E, C) with C = Tg*k/E*cf — size
+    Tg^2*k*cf per group, so small groups keep them linear in total tokens
+    (a global (T, E, C) dispatch would be quadratic in T and physically
+    impossible at train shapes). The group dim shards over the batch axes.
+    """
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    tg = min(group_size, T)
+    assert T % tg == 0, (T, tg)
+    G = T // tg
+    xg = x.reshape(G, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)                 # (G, Tg, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # capacity floor: tiny groups (decode batches) must never drop tokens —
+    # a cap of min(tg, 16) lets any routing pattern through when tg is small
+    cap = max(int((tg * k / e) * capacity_factor), min(tg, 16))
+
+    # sequential-choice capacity assignment (GShard): earlier choices first
+    dispatch = jnp.zeros((G, tg, e, cap), x.dtype)
+    combine = jnp.zeros((G, tg, e, cap), jnp.float32)
+    counts = jnp.zeros((G, e), jnp.int32)
+    for choice in range(k):
+        onehot = jax.nn.one_hot(gate_idx[..., choice], e, dtype=jnp.int32)
+        pos = counts[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot
+        keep = (pos < cap) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, 0), cap,
+                                dtype=x.dtype) * keep[..., None].astype(x.dtype)
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh.astype(jnp.float32) \
+            * gate_w[..., choice, None, None]
+        counts = counts + jnp.sum(onehot * keep, axis=1)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)     # (G, E, C, d)
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["up"])
+    g = jnp.einsum("gecd,edf->gecf", expert_in, p["gate"])
+    h = h * activation(g, cfg.act)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["down"])    # (G, E, C, d)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+    y = y.reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, cfg)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    frac = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+    return y, aux

@@ -1,0 +1,128 @@
+"""Mamba2 block (state-space duality) — arXiv:2405.21060.
+
+in_proj -> [z | x | B | C | dt] -> causal conv over (x,B,C) -> SiLU ->
+SSD(x·dt, exp(dt·A)) -> gate by SiLU(z) -> RMSNorm -> out_proj.
+
+Prefill/train run the chunked SSD (kernels/ops.ssd — Pallas on TPU); decode
+runs the O(1) recurrence with a (conv, ssm) state cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .config import ModelConfig
+from .layers import init_linear, init_norm, linear, norm
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), dtype),
+        "out_norm": init_norm(di, "rmsnorm", dtype),
+        "out_proj": init_linear(ks[2], di, d, dtype),
+    }
+
+
+def _split(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width K: (B,L,C) -> (B,L,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba_prefill(p: Params, x, cfg: ModelConfig,
+                  initial: Optional[Tuple] = None):
+    """x: (B,L,d) -> (y, (conv_state, ssm_state)).
+
+    L is padded up to a multiple of ssm_chunk; padded positions get dt = 0,
+    which makes their state update the identity (exp(0)=1 decay, 0 input),
+    so the final state is exact.
+    """
+    Bsz, L, _ = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = linear(p["in_proj"], x)
+    z, xBC, dt = _split(cfg, proj)
+    conv_in = xBC
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(Bsz, L, h, hd)
+    Bmat = xBC[..., di:di + n]
+    Cmat = xBC[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    pad = (-L) % cfg.ssm_chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> identity step
+
+    init_state = initial[1] if initial is not None else None
+    y, final_state = kops.ssd(
+        xs, dt.astype(xs.dtype), A.astype(xs.dtype), Bmat, Cmat,
+        chunk=cfg.ssm_chunk, initial_state=init_state,
+        impl=cfg.ssm_impl,
+        interpret=cfg.ssm_impl == "pallas_interpret")
+    y = y[:, :L] + xs[:, :L] * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, di)
+    y = y * jax.nn.silu(z)
+    y = norm(p["out_norm"], y)
+    conv_state = conv_in[:, -(cfg.ssm_conv - 1):, :]   # last K-1 raw inputs
+    return linear(p["out_proj"], y), (conv_state, final_state)
+
+
+def mamba_decode(p: Params, x, cfg: ModelConfig, cache: Tuple):
+    """x: (B,1,d); cache: (conv_state (B,K-1,C), ssm_state (B,h,hd,n))."""
+    Bsz = x.shape[0]
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_state, ssm_state = cache
+    proj = linear(p["in_proj"], x[:, 0, :])
+    z, xBC, dt = _split(cfg, proj)
+    # roll conv state
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC_c = jax.nn.silu(conv_out)
+    xs = xBC_c[..., :di].reshape(Bsz, h, hd)
+    Bmat = xBC_c[..., di:di + n]
+    Cmat = xBC_c[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = kref.ssd_decode_reference(
+        xs, dt.astype(xs.dtype), A.astype(xs.dtype), Bmat, Cmat, ssm_state)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(Bsz, di)
+    y = y * jax.nn.silu(z)
+    y = norm(p["out_norm"], y)
+    out = linear(p["out_proj"], y)[:, None, :]
+    return out, (window[:, 1:, :], ssm_state)
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int):
+    """(conv_state, ssm_state) shapes for cache allocation."""
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return ((batch, cfg.ssm_conv - 1, conv_dim),
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state))

@@ -1,0 +1,128 @@
+"""Continuous-batching serving engine — the service MUDAP autoscales.
+
+A fixed pool of decode slots; requests are admitted when a slot frees and
+the *token budget* allows. The engine exposes the elasticity parameters the
+LM profiles advertise (DESIGN.md §2):
+
+  * ``chips``   -> admission token budget scales with granted chip share
+  * ``context`` -> prompts are truncated to the current budget (data quality)
+  * ``rung``    -> model-variant rung (here: logical switch, reported in
+                   metrics; a deployment would swap quantized weights)
+
+Decode runs one batched step for all active slots per ``step()`` — requests
+join/leave between steps (continuous batching). Everything is synchronous
+and deterministic so tests can drive it tick by tick, mirroring the 1 s
+cycle of the stream-processing services in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 4                 # decode batch size (fixed pool)
+    max_seq: int = 256
+    chips: float = 1.0             # elasticity: resource share
+    context: int = 256             # elasticity: prompt budget (data quality)
+    rung: int = 4                  # elasticity: model-size rung
+    tokens_per_chip_step: int = 64 # admission budget per step per chip
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.caches: Dict[int, object] = {}
+        self.completed: List[Request] = []
+        self.steps = 0
+        self.tokens_out = 0
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, {"tokens": t},
+                                       max_seq=cfg.max_seq))
+        self._decode = jax.jit(model.decode)
+
+    # -- elasticity API (what MUDAP's ScalingAPI calls) -----------------------
+    def apply(self, param: str, value: float) -> None:
+        if param == "chips":
+            self.cfg.chips = float(value)
+        elif param == "context":
+            self.cfg.context = int(value)
+        elif param == "rung":
+            self.cfg.rung = int(value)
+        else:
+            raise KeyError(param)
+
+    def metrics(self) -> Dict[str, float]:
+        return {"queue": float(len(self.queue)),
+                "active": float(len(self.active)),
+                "steps": float(self.steps),
+                "tokens_out": float(self.tokens_out),
+                "chips": self.cfg.chips, "context": float(self.cfg.context),
+                "rung": float(self.cfg.rung)}
+
+    # -- request flow -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        budget = int(self.cfg.chips * self.cfg.tokens_per_chip_step)
+        for slot in range(self.cfg.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue[0]
+            prompt = req.prompt[-min(len(req.prompt), self.cfg.context):]
+            if len(prompt) > budget:
+                continue                      # not enough budget this step
+            self.queue.pop(0)
+            budget -= len(prompt)
+            toks = jnp.asarray(prompt, jnp.int32)[None, :]
+            logits, cache = self._prefill(self.params, toks)
+            first = int(jnp.argmax(logits[0]))
+            req.generated.append(first)
+            self.active[slot] = req
+            self.caches[slot] = (cache, first)
+
+    def step(self) -> int:
+        """One engine tick: admit + one decode step for every active slot.
+        Returns tokens produced."""
+        self._admit()
+        produced = 0
+        finished = []
+        for slot, req in list(self.active.items()):
+            cache, last = self.caches[slot]
+            tok = jnp.full((1, 1), last, jnp.int32)
+            logits, cache = self._decode(self.params, tok, cache)
+            nxt = int(jnp.argmax(logits[0]))
+            req.generated.append(nxt)
+            produced += 1
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                finished.append(slot)
+                self.completed.append(req)
+            else:
+                self.caches[slot] = (cache, nxt)
+        for slot in finished:
+            del self.active[slot], self.caches[slot]
+        self.steps += 1
+        self.tokens_out += produced
+        return produced

@@ -1,0 +1,4 @@
+from .optimizer import AdamWConfig, adamw, compressed_adamw
+from .checkpoint import CheckpointManager
+
+__all__ = ["AdamWConfig", "adamw", "compressed_adamw", "CheckpointManager"]

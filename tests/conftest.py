@@ -1,0 +1,12 @@
+import os
+# Tests must see the plain 1-device CPU backend (the dry-run sets its own
+# XLA_FLAGS in-process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

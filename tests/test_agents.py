@@ -1,0 +1,79 @@
+"""Baseline agents: VPA band behavior, DQN pretraining."""
+import numpy as np
+
+from repro.core import RASKAgent, RaskConfig
+from repro.core.agents import DQNAgent, DQNConfig, VPAAgent
+from repro.core.elasticity import ServiceId
+from repro.core.platform import MUDAP
+from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+from repro.env.profiles import QR_PROFILE
+
+
+class StubBackend:
+    def __init__(self, util):
+        self.util = util
+        self.applied = {}
+
+    def apply(self, param, value):
+        self.applied[param] = value
+
+    def metrics(self):
+        return {"cpu_utilization": self.util,
+                "rps": 10.0, "completion": 1.0, **self.applied}
+
+
+def _platform(util):
+    m = MUDAP({"cores": 8.0})
+    b = StubBackend(util)
+    m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api, b,
+               list(QR_PROFILE.slos), {"cores": 4.0, "data_quality": 500})
+    for t in range(1, 7):
+        m.scrape(float(t))
+    return m, b
+
+
+def test_vpa_scales_up_when_hot():
+    m, b = _platform(util=0.99)
+    agent = VPAAgent(m)
+    agent.cycle(6.0)
+    assert m.assignment("e/qr-detector/c0")["cores"] == 4.25
+
+
+def test_vpa_scales_down_when_cold():
+    m, b = _platform(util=0.2)
+    agent = VPAAgent(m)
+    agent.cycle(6.0)
+    assert m.assignment("e/qr-detector/c0")["cores"] == 3.75
+
+
+def test_vpa_holds_in_band():
+    m, b = _platform(util=0.9)
+    agent = VPAAgent(m)
+    agent.cycle(6.0)
+    assert m.assignment("e/qr-detector/c0")["cores"] == 4.0
+
+
+def test_dqn_pretrain_and_act():
+    profiles = list(paper_profiles().values())
+    env = EdgeEnvironment(profiles, {"cores": 8.0}, seed=0)
+    rask = RASKAgent(env.platform, paper_knowledge(), RaskConfig(xi=10),
+                     seed=0)
+    env.run(rask, duration_s=150)
+    models = {sid: m["tp_max"] for sid, m in rask.models.items()}
+    feats = {sid: paper_knowledge()[env.platform.service(sid).sid.type]["tp_max"]
+             for sid in rask.services}
+    rps = {sid: env.platform.service(sid).backend.profile.default_rps
+           for sid in rask.services}
+
+    env2 = EdgeEnvironment(profiles, {"cores": 8.0}, seed=1)
+    dqn = DQNAgent(env2.platform, DQNConfig(train_steps=400), seed=1)
+    losses = dqn.pretrain(models, rps, feats)
+    assert all(np.isfinite(v) for v in losses.values())
+    hist = env2.run(dqn, duration_s=100)
+    assert len(hist) == 10
+    # actions stay within bounds
+    for sid in env2.platform.services():
+        api = env2.platform.service(sid).api
+        for k, v in env2.platform.assignment(sid).items():
+            lo, hi = api.bounds()[k]
+            assert lo <= v <= hi

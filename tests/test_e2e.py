@@ -1,0 +1,27 @@
+"""End-to-end: driver modules run and produce sane results."""
+import sys
+
+import numpy as np
+import pytest
+
+
+def test_train_driver(tmp_path):
+    from repro.launch.train import main
+    hist = main(["--steps", "20", "--batch", "4", "--seq", "32",
+                 "--ckpt-dir", str(tmp_path), "--lr", "5e-3"])
+    assert len(hist) == 20
+    assert hist[-1]["loss"] < hist[0]["loss"] + 0.5
+
+
+def test_serve_driver():
+    from repro.launch.serve import main
+    engine = main(["--requests", "4", "--prompt-len", "16",
+                   "--max-new", "4", "--slots", "2"])
+    assert len(engine.completed) == 4
+
+
+def test_autoscale_driver():
+    from repro.launch.autoscale import main
+    hist = main(["--minutes", "6", "--chips", "16"])
+    post = [h.fulfillment for h in hist[25:]]
+    assert np.mean(post) > 0.6

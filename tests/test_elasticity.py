@@ -1,0 +1,47 @@
+"""Table-I API description: bounds, steps, clipping."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.elasticity import ApiDescription, ElasticityParameter
+
+
+def param(step=None, lo=1.0, hi=8.0, res=True):
+    return ElasticityParameter("cores", "resources", "/resources",
+                               lo, hi, step, res)
+
+
+def test_clip_bounds():
+    p = param()
+    assert p.clip(9.5) == 8.0
+    assert p.clip(-3.0) == 1.0
+    assert p.clip(4.5) == 4.5
+
+
+def test_clip_step():
+    # YOLO input must be a multiple of 32 (paper §V-B) — same mechanism
+    p = ElasticityParameter("q", "quality", "/quality", 128, 320, 32.0)
+    assert p.clip(150) == 160
+    assert p.clip(319) == 320
+    assert p.clip(1000) == 320
+
+
+def test_default_half_range():
+    assert param().default == 4.5   # (8+1)/2 — paper Table III convention
+
+
+@given(st.floats(-100, 100))
+def test_clip_idempotent_and_bounded(v):
+    p = ElasticityParameter("q", "quality", "/q", 10.0, 60.0, 1.0)
+    c = p.clip(v)
+    assert 10.0 <= c <= 60.0
+    assert p.clip(c) == c
+
+
+def test_api_description():
+    api = ApiDescription("svc", [param(), ElasticityParameter(
+        "quality", "quality", "/q", 100, 1000, 1.0)])
+    assert api.names == ["cores", "quality"]
+    assert api.resource_names == ["cores"]
+    assert api.bounds()["quality"] == (100, 1000)
+    with pytest.raises(KeyError):
+        api.parameter("nope")

@@ -1,0 +1,66 @@
+"""HLO cost model: must match XLA on loop-free graphs and trip-scale scans."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def test_scan_trip_scaling():
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    def f_unroll(x, w):
+        for i in range(8):
+            x = jnp.tanh(x @ w[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    a_scan = analyze(jax.jit(f_scan).lower(x, w).compile().as_text())
+    a_unroll = analyze(jax.jit(f_unroll).lower(x, w).compile().as_text())
+    dot_flops = 8 * 2 * 64 * 128 * 128
+    assert a_scan["flops"] == pytest.approx(a_unroll["flops"], rel=0.02)
+    assert a_scan["flops"] == pytest.approx(dot_flops, rel=0.05)
+
+
+def test_matches_xla_on_loop_free_autodiff():
+    def f(params, x, y):
+        w1, w2 = params
+
+        def loss(p):
+            a, b = p
+            h = jax.nn.silu(x @ a)
+            return jnp.mean((h @ b - y) ** 2)
+
+        return jax.value_and_grad(loss)(params)
+
+    params = (jax.ShapeDtypeStruct((64, 128), jnp.float32),
+              jax.ShapeDtypeStruct((128, 64), jnp.float32))
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    y = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    c = jax.jit(f).lower(params, x, y).compile()
+    ours = analyze(c.as_text())
+    xla = c.cost_analysis()
+    assert ours["flops"] == pytest.approx(xla["flops"], rel=0.02)
+    assert ours["bytes"] == pytest.approx(xla["bytes accessed"], rel=0.02)
+
+
+def test_parse_tuple_results_with_comments():
+    # tuples with /*index=N*/ comments (the while-instruction format)
+    txt = """HloModule m
+ENTRY %main (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  %t = (f32[4,4]{1,0}, /*index=1*/s32[]) tuple(%p, %c)
+  ROOT %d = f32[4,4]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps, entry = parse_module(txt)
+    assert entry == "main"
+    ops = [i.op for i in comps["main"].instrs]
+    assert "tuple" in ops and "dot" in ops
+    a = analyze(txt)
+    assert a["flops"] == 2 * 4 * 4 * 4

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assignment requirement c)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,S,D,bq,bk", [
+    (1, 2, 1, 128, 32, 64, 64),
+    (2, 4, 2, 256, 64, 128, 128),
+    (1, 8, 8, 64, 16, 32, 32),     # MHA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(dtype, B, H, KH, S, D, bq, bk, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KH, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KH, S, D), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_reference(q, k, v, causal=causal,
+                                         window=window)
+    assert out.dtype == dtype
+    assert jnp.allclose(out.astype(jnp.float32), want.astype(jnp.float32),
+                        **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,S,D,bs", [
+    (2, 8, 2, 512, 64, 128),
+    (1, 4, 4, 256, 32, 64),
+    (4, 16, 2, 128, 16, 128),
+])
+@pytest.mark.parametrize("length,start", [(100, 0), (512, 0), (200, 60)])
+def test_decode_attention_sweep(dtype, B, H, KH, S, D, bs, length, start):
+    length = min(length, S)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, S, KH, D), dtype)
+    vc = jax.random.normal(ks[2], (B, S, KH, D), dtype)
+    out = decode_attention_pallas(q, kc, vc, jnp.int32(length),
+                                  jnp.int32(start), block_s=bs,
+                                  interpret=True)
+    want = ref.decode_attention_reference(q, kc, vc, jnp.int32(length),
+                                          jnp.int32(start))
+    assert jnp.allclose(out.astype(jnp.float32), want.astype(jnp.float32),
+                        **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,l,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 8, 64, 128, 128),     # production-like head
+])
+def test_ssd_sweep(dtype, b, l, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = (jax.random.normal(ks[0], (b, l, h, p)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))).astype(dtype)
+    A = (-jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)).astype(dtype)
+    B = (jax.random.normal(ks[3], (b, l, n)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, l, n)) * 0.5).astype(dtype)
+    y, fin = ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yr, finr = ref.ssd_reference(x, dt, A, B, C, chunk=chunk)
+    tol = dict(atol=1e-1, rtol=1e-1) if dtype == jnp.bfloat16 \
+        else dict(atol=1e-4, rtol=1e-3)
+    assert jnp.allclose(y.astype(jnp.float32), yr.astype(jnp.float32), **tol)
+    assert jnp.allclose(fin.astype(jnp.float32), finr.astype(jnp.float32),
+                        **tol)
+
+
+def test_ssd_chunked_equals_decode_loop():
+    """Property: the chunked SSD equals the step-by-step recurrence."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, l, h, p, n = 1, 32, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, l, n)) * 0.5
+    y, fin = ref.ssd_reference(x, dt, A, B, C, chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    outs = []
+    for t in range(l):
+        yt, state = ref.ssd_decode_reference(
+            x[:, t], dt[:, t], A, B[:, t], C[:, t], state)
+        outs.append(yt)
+    y_loop = jnp.stack(outs, axis=1)
+    assert jnp.allclose(y, y_loop, atol=1e-4, rtol=1e-3)
+    assert jnp.allclose(fin, state, atol=1e-4, rtol=1e-3)
+
+
+def test_chunked_attention_grads_match_reference():
+    from repro.kernels.ref import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, S, KH, G, D = 1, 128, 2, 2, 16
+    q = jax.random.normal(ks[0], (B, S, KH, G, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+
+    def loss_chunked(q, k, v):
+        return jnp.sum(chunked_attention(q, k, v, True, None, 32, 32) ** 2)
+
+    def loss_ref(q, k, v):
+        qf = q.reshape(B, S, KH * G, D).transpose(0, 2, 1, 3)
+        o = ref.flash_attention_reference(
+            qf, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), causal=True)
+        return jnp.sum(o ** 2)
+
+    gc = jax.grad(loss_chunked, (0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, (0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gr):
+        assert jnp.allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_ops_dispatch_reference_and_interpret():
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 16))
+    k = jax.random.normal(ks[1], (1, 1, 64, 16))
+    v = jax.random.normal(ks[2], (1, 1, 64, 16))
+    a = ops.flash_attention(q, k, v, impl="reference")
+    b = ops.flash_attention(q, k, v, impl="pallas_interpret")
+    assert jnp.allclose(a, b, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,67 @@
+"""MUDAP: registration, scaling API, clipping, global headroom."""
+import pytest
+
+from repro.core.elasticity import ServiceId
+from repro.core.platform import MUDAP
+from repro.env.profiles import QR_PROFILE, CV_PROFILE
+
+
+class FakeBackend:
+    def __init__(self):
+        self.applied = {}
+
+    def apply(self, param, value):
+        self.applied[param] = value
+
+    def metrics(self):
+        return {"tp": 1.0, **self.applied}
+
+
+def test_register_scale_clip():
+    m = MUDAP({"cores": 8.0})
+    b = FakeBackend()
+    m.register(ServiceId("edge-0", "qr-detector", "c0"), QR_PROFILE.api, b,
+               list(QR_PROFILE.slos))
+    sid = m.services()[0]
+    # clipped to parameter bounds
+    assert m.scale(sid, "cores", 99.0) == 8.0
+    assert b.applied["cores"] == 8.0
+    # step quantization
+    assert m.scale(sid, "data_quality", 555.4) == 555.0
+
+
+def test_global_headroom():
+    m = MUDAP({"cores": 8.0})
+    b1, b2 = FakeBackend(), FakeBackend()
+    m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api, b1,
+               list(QR_PROFILE.slos), {"cores": 6.0, "data_quality": 500})
+    m.register(ServiceId("e", "cv-analyzer", "c0"), CV_PROFILE.api, b2,
+               list(CV_PROFILE.slos),
+               {"cores": 1.0, "data_quality": 224, "model_size": 3})
+    sid2 = "e/cv-analyzer/c0"
+    # only 2 cores of headroom left: request for 5 is clipped
+    applied = m.scale(sid2, "cores", 5.0)
+    assert applied <= 2.0 + 1e-6
+
+
+def test_duplicate_registration_rejected():
+    m = MUDAP({"cores": 8.0})
+    b = FakeBackend()
+    m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api, b,
+               list(QR_PROFILE.slos))
+    with pytest.raises(ValueError):
+        m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api, b,
+                   list(QR_PROFILE.slos))
+
+
+def test_reset_defaults():
+    m = MUDAP({"cores": 8.0})
+    b1, b2 = FakeBackend(), FakeBackend()
+    m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api, b1,
+               list(QR_PROFILE.slos))
+    m.register(ServiceId("e", "cv-analyzer", "c0"), CV_PROFILE.api, b2,
+               list(CV_PROFILE.slos))
+    m.reset_defaults()
+    for sid in m.services():
+        a = m.assignment(sid)
+        assert a["cores"] == pytest.approx(4.0)   # C/|S| = 8/2

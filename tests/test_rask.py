@@ -1,0 +1,63 @@
+"""RASK Algorithm 1 end-to-end on the simulated environment."""
+import numpy as np
+import pytest
+
+from repro.core import RASKAgent, RaskConfig
+from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+
+
+def run_rask(backend="slsqp", xi=15, duration=400, seed=0, **kw):
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          seed=seed)
+    agent = RASKAgent(env.platform, paper_knowledge(),
+                      RaskConfig(xi=xi, backend=backend, **kw), seed=seed)
+    hist = env.run(agent, duration_s=duration)
+    return env, agent, hist
+
+
+def test_exploration_phase_length():
+    env, agent, hist = run_rask(duration=200, xi=15)
+    explored = [h.explored for h in hist]
+    assert all(explored[:15])
+    assert not any(explored[15:])
+
+
+def test_convergence_beats_default():
+    env, agent, hist = run_rask(duration=500, xi=15)
+    post = [h.fulfillment for h in hist[-10:]]
+    assert np.mean(post) > 0.9, post
+
+
+@pytest.mark.parametrize("backend", ["pgd"])
+def test_pgd_backend_converges(backend):
+    env, agent, hist = run_rask(backend=backend, duration=500, xi=15)
+    post = [h.fulfillment for h in hist[-10:]]
+    assert np.mean(post) > 0.9, post
+
+
+def test_cache_warm_start_used():
+    env, agent, hist = run_rask(duration=300, xi=15)
+    assert agent._cached_x is not None
+    env2, agent2, hist2 = run_rask(duration=300, xi=15, cache=False)
+    # both run; caching agent must not be worse at the end
+    a = np.mean([h.fulfillment for h in hist[-5:]])
+    b = np.mean([h.fulfillment for h in hist2[-5:]])
+    assert a >= b - 0.1
+
+
+def test_noise_applied():
+    env, agent, hist = run_rask(duration=300, xi=10, eta=0.1, seed=1)
+    # noisy assignments still valid (clipped by platform on apply)
+    for sid in env.platform.services():
+        a = env.platform.assignment(sid)
+        api = env.platform.service(sid).api
+        for k, v in a.items():
+            lo, hi = api.bounds()[k]
+            assert lo <= v <= hi
+
+
+def test_constraint_never_violated():
+    env, agent, hist = run_rask(duration=400, xi=10)
+    total = sum(env.platform.assignment(s).get("cores", 0.0)
+                for s in env.platform.services())
+    assert total <= 8.0 + 1e-6

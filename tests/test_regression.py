@@ -1,0 +1,58 @@
+"""Eq. (2) polynomial regression + E2-style degree selection."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regression import (fit_polynomial, mse, polynomial_exponents,
+                                   select_degree, train_test_split)
+
+
+def test_exponents_count():
+    # C(n+d, d) terms
+    assert len(polynomial_exponents(2, 2)) == 6
+    assert len(polynomial_exponents(3, 2)) == 10
+    assert polynomial_exponents(2, 2).shape[1] == 2
+
+
+def test_exact_fit_quadratic(rng):
+    X = rng.uniform(0, 8, (200, 2)).astype(np.float32)
+    y = 3.0 + 2.0 * X[:, 0] - 0.5 * X[:, 1] ** 2 + X[:, 0] * X[:, 1]
+    m = fit_polynomial(X, y, degree=2, x_scale=[8.0, 8.0])
+    assert mse(m, X, y) < 1e-4
+    pred = float(m.predict(np.array([2.0, 3.0], np.float32)))
+    assert pred == pytest.approx(3 + 4 - 4.5 + 6, rel=1e-3)
+
+
+def test_high_degree_conditioning(rng):
+    # raw features up to 1000 at delta=6 must not overflow (x_scale handles it)
+    X = rng.uniform(100, 1000, (100, 1)).astype(np.float32)
+    y = 0.001 * X[:, 0] + 5.0
+    m = fit_polynomial(X, y, degree=6, x_scale=[1000.0])
+    assert np.isfinite(mse(m, X, y))
+    assert mse(m, X, y) < 1.0
+
+
+def test_select_degree_recovers_truth(rng):
+    X = rng.uniform(0, 8, (300, 1)).astype(np.float32)
+    y = (X[:, 0] - 4.0) ** 4 + rng.normal(0, 0.5, 300).astype(np.float32)
+    best, errs = select_degree(X, y, x_scale=[8.0])
+    assert best >= 4
+    assert errs[best] <= errs[1]
+
+
+def test_split_deterministic(rng):
+    X = rng.normal(size=(50, 2)); y = rng.normal(size=50)
+    a = train_test_split(X, y, seed=3)
+    b = train_test_split(X, y, seed=3)
+    assert np.allclose(a[0], b[0]) and np.allclose(a[3], b[3])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 1000))
+def test_predict_finite_on_bounded_inputs(degree, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 10, (30, 2)).astype(np.float32)
+    y = rng.uniform(0, 100, 30).astype(np.float32)
+    m = fit_polynomial(X, y, degree, x_scale=[10.0, 10.0])
+    p = np.asarray(m.predict(X))
+    assert np.all(np.isfinite(p))

@@ -1,0 +1,55 @@
+"""Continuous-batching engine + elasticity hooks."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models import build
+from repro.serve.engine import EngineConfig, Request, ServingEngine
+
+
+def make_engine(slots=2, chips=4.0):
+    cfg = dataclasses.replace(get("gemma3-1b").smoke(), dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, EngineConfig(
+        slots=slots, max_seq=64, context=32, chips=chips)), cfg
+
+
+def test_requests_complete():
+    engine, cfg = make_engine()
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        engine.submit(Request(rid, rng.integers(0, cfg.vocab, 16,
+                                                dtype=np.int64).astype(np.int32),
+                              max_new_tokens=4))
+    for _ in range(40):
+        engine.step()
+        if len(engine.completed) == 5:
+            break
+    assert len(engine.completed) == 5
+    assert all(len(r.generated) == 4 for r in engine.completed)
+
+
+def test_chip_budget_gates_admission():
+    engine, cfg = make_engine(chips=0.1)    # budget 6 tokens/step
+    rng = np.random.default_rng(0)
+    engine.submit(Request(0, rng.integers(0, cfg.vocab, 16).astype(np.int32)))
+    engine.step()
+    assert len(engine.active) == 0          # prompt of 16 > budget
+    engine.apply("chips", 4.0)
+    engine.step()
+    assert len(engine.active) == 1
+
+
+def test_context_truncation():
+    engine, cfg = make_engine()
+    engine.apply("context", 8)
+    rng = np.random.default_rng(0)
+    engine.submit(Request(0, rng.integers(0, cfg.vocab, 30).astype(np.int32),
+                          max_new_tokens=6))
+    engine.step()
+    assert len(engine.active) == 1          # admitted after truncation to 8
+    m = engine.metrics()
+    assert m["context"] == 8.0

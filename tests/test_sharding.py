@@ -1,0 +1,100 @@
+"""Sharding rules: divisibility fallbacks + executable tiny SPMD step."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get
+from repro.launch import make_debug_mesh, make_train_step
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   param_spec_resolved, params_shardings)
+
+
+@pytest.fixture(scope="module")
+def mesh16():
+    # a fake 16x16 mesh shape check needs real devices; use spec-level tests
+    return make_debug_mesh(1, 1)
+
+
+def test_param_spec_divisibility_fallback(mesh16):
+    # vocab 50280 doesn't divide 1 -> everything divides a 1-sized axis;
+    # test the *rule logic* against a synthetic mesh object instead
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((4, 4))
+
+    spec = param_spec_resolved(("embed",), (50280, 1024), FakeMesh(), True)
+    assert tuple(spec) in (((), ()), (None, "data"), ("model", "data")) or \
+        spec == P(None, "data")   # vocab not divisible by 4 -> no model dim
+    spec2 = param_spec_resolved(("embed",), (65536, 8192), FakeMesh(), True)
+    assert spec2 == P("model", "data")
+    # moe experts: 16 divides 4 -> EP; 60 doesn't -> TP on d_ff
+    up16 = param_spec_resolved(("layers", "ffn", "up"), (8, 16, 64, 128),
+                               FakeMesh(), True)
+    assert tuple(up16)[1] == "model"
+    up60 = param_spec_resolved(("layers", "ffn", "up"), (8, 60, 64, 128),
+                               FakeMesh(), True)
+    assert tuple(up60)[1] == "model"   # 60 % 4 == 0 -> EP still fits here
+
+    class Mesh16:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    # on the production 16-way model axis 60 experts do NOT divide -> TP
+    up60b = param_spec_resolved(("layers", "ffn", "up"), (8, 60, 64, 128),
+                                Mesh16(), True)
+    assert tuple(up60b)[1] is None and tuple(up60b)[3] == "model"
+
+
+def test_attention_and_norm_specs():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((4, 4))
+
+    wq = param_spec_resolved(("layers", "attn", "wq", "w"), (26, 1152, 1024),
+                             FakeMesh(), True)
+    assert tuple(wq) == (None, "data", "model")
+    wo = param_spec_resolved(("layers", "attn", "wo", "w"), (26, 1024, 1152),
+                             FakeMesh(), True)
+    assert tuple(wo) == (None, "model", "data")
+    ln = param_spec_resolved(("layers", "ln1", "scale"), (26, 1152),
+                             FakeMesh(), True)
+    assert tuple(ln) == ()
+
+
+def test_cache_shardings_long_context_fallback():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    # batch=1 can't shard over data -> falls to context sharding over model
+    from repro.launch.sharding import _pick
+    spec = _pick((26, 1, 524288, 1, 256), FakeMesh(),
+                 P(None, "data", "model"), P(None, None, "model"))
+    assert tuple(spec) == (None, None, "model")
+
+
+def test_tiny_spmd_train_step_executes(mesh16):
+    """The same StepBundle the dry-run lowers must also *run* (1-dev mesh)."""
+    cfg = dataclasses.replace(get("qwen3-32b").smoke(), dtype="float32",
+                              remat="none")
+    bundle = make_train_step(cfg, mesh16, batch=4, seq=16, microbatches=2)
+    jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings)
+    model_params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), bundle.args[0])
+    # real init for stability
+    from repro.models import build
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), bundle.args[1])
+    opt = type(bundle.args[1])(jnp.int32(0), opt.mu, opt.nu) \
+        if hasattr(bundle.args[1], "mu") else opt
+    batch = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), bundle.args[2])
+    with mesh16:
+        p2, o2, metrics = jitted(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))

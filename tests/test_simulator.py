@@ -1,0 +1,65 @@
+"""Environment simulator: backpressure, settling, workload determinism."""
+import numpy as np
+
+from repro.env.profiles import QR_PROFILE
+from repro.env.simulator import SimulatedService
+from repro.env.workloads import bursty, constant, diurnal
+
+
+def make_service(seed=0):
+    return SimulatedService(QR_PROFILE, np.random.default_rng(seed),
+                            noise=0.0)
+
+
+def test_throughput_capped_by_capacity():
+    s = make_service()
+    s.apply("cores", 1.0)
+    s.apply("data_quality", 1000.0)
+    for t in range(20):
+        s.rps = 1000.0
+        s.tick(t)
+    m = s.metrics()
+    assert m["throughput"] < 1000.0
+    assert m["completion"] < 1.0
+    assert m["queue"] > 0.0
+
+
+def test_resource_settling():
+    s = make_service()
+    s.apply("cores", 8.0)
+    before = s.current["cores"]
+    s.tick(1.0)
+    mid = s.current["cores"]
+    for t in range(2, 8):
+        s.tick(float(t))
+    after = s.current["cores"]
+    assert before < mid < after
+    assert abs(after - 8.0) < 0.2     # settled in < 5 s (paper §IV)
+
+
+def test_config_change_immediate():
+    s = make_service()
+    s.apply("data_quality", 900.0)
+    assert s.current["data_quality"] == 900.0
+
+
+def test_quality_throughput_tradeoff():
+    s = make_service()
+    s.apply("cores", 4.0)
+    [s.tick(t) for t in range(10)]
+    s.apply("data_quality", 200.0)
+    s.tick(10); hi = s.metrics()["tp_max"]
+    s.apply("data_quality", 1000.0)
+    s.tick(11); lo = s.metrics()["tp_max"]
+    assert hi > lo   # lower quality -> higher throughput
+
+
+def test_workloads_deterministic_and_bounded():
+    for pat_fn in (bursty, diurnal):
+        p1 = pat_fn(100.0, duration_s=600, seed=5)
+        p2 = pat_fn(100.0, duration_s=600, seed=5)
+        vals = [p1(t) for t in range(0, 600, 7)]
+        assert vals == [p2(t) for t in range(0, 600, 7)]
+        assert all(0.0 <= v <= 100.0 for v in vals)
+        assert max(vals) > 50.0   # reaches high load
+    assert constant(5.0)(123) == 5.0

@@ -1,0 +1,48 @@
+"""SLO math — paper Eq. (1), (6), (8)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.slo import (SLO, completion, fulfillment, global_fulfillment,
+                            service_fulfillment, violation_rate)
+
+
+def test_eq1_basic():
+    q = SLO("tp", 30.0)
+    assert float(q.fulfillment(15.0)) == pytest.approx(0.5)
+    assert float(q.fulfillment(30.0)) == 1.0
+
+
+def test_eq1_no_overfulfillment():
+    # paper: m=40 and m=100 both give phi = 1.0
+    q = SLO("tp", 30.0)
+    assert float(q.fulfillment(40.0)) == 1.0
+    assert float(q.fulfillment(100.0)) == 1.0
+
+
+@given(st.floats(0.0, 1e6), st.floats(1e-3, 1e6))
+def test_eq1_bounded_and_monotone(m, t):
+    phi = float(fulfillment(m, t))
+    assert 0.0 <= phi <= 1.0
+    assert float(fulfillment(m + 1.0, t)) >= phi - 1e-6
+
+
+def test_eq6_completion():
+    assert float(completion(5.0, 10.0)) == pytest.approx(0.5)
+    assert float(completion(20.0, 10.0)) == 1.0   # capped via min
+    assert float(completion(0.0, 0.0)) == 1.0     # idle stream counts complete
+
+
+def test_eq8_weighted_global():
+    slos = [SLO("a", 1.0, 0.5), SLO("b", 1.0, 1.0)]
+    metrics = {"a": 0.5, "b": 1.0}
+    # (0.5*0.5 + 1*1) / 1.5
+    assert float(service_fulfillment(slos, metrics)) == pytest.approx(
+        (0.25 + 1.0) / 1.5)
+    g = global_fulfillment([metrics, metrics], [slos, slos])
+    assert float(g) == pytest.approx((0.25 + 1.0) / 1.5)
+
+
+def test_violation_rate():
+    assert violation_rate([1.0, 0.9, 1.0, 0.5]) == 0.5
+    assert violation_rate([]) == 0.0

@@ -1,0 +1,82 @@
+"""Eq. (4) SOLVE: both backends respect constraints and find optima."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regression import fit_polynomial
+from repro.core.slo import SLO
+from repro.core.solver import ServiceSpec, SolverProblem
+
+
+def make_problem(n_services=2):
+    specs = []
+    for i in range(n_services):
+        specs.append(ServiceSpec(
+            name=f"s{i}",
+            param_names=("cores", "quality"),
+            lower=(0.1, 100.0), upper=(8.0, 1000.0),
+            resource_mask=(True, False),
+            slos=(SLO("quality", 800.0, 0.5), SLO("completion", 1.0, 1.0)),
+            relation_features=(("tp_max", (0, 1)),)))
+    return SolverProblem(specs)
+
+
+def fit_models(problem):
+    # ground truth tp = 20*cores - quality/100 (concave-ish linear)
+    rng = np.random.default_rng(0)
+    X = np.c_[rng.uniform(0.1, 8, 300), rng.uniform(100, 1000, 300)]
+    Y = 20 * X[:, 0] - X[:, 1] / 100.0
+    m = fit_polynomial(X.astype(np.float32), Y.astype(np.float32), 2,
+                       x_scale=[8.0, 1000.0])
+    return {s.name: {"tp_max": m} for s in problem.specs}
+
+
+@pytest.mark.parametrize("backend", ["slsqp", "pgd"])
+def test_solver_respects_constraints(backend):
+    problem = make_problem(3)
+    models = fit_models(problem)
+    rps = np.array([50.0, 50.0, 50.0], np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(0), 8.0)
+    if backend == "slsqp":
+        a, score = problem.solve_slsqp(models, rps, x0, 8.0)
+    else:
+        a, score = problem.solve_pgd(models, rps, x0, 8.0, n_starts=4,
+                                     iters=60)
+    assert np.all(a >= problem.lower - 1e-4)
+    assert np.all(a <= problem.upper + 1e-4)
+    assert a[problem.resource_mask].sum() <= 8.0 + 1e-3
+    assert score > 0
+
+
+@pytest.mark.parametrize("backend", ["slsqp", "pgd"])
+def test_solver_finds_good_assignment(backend):
+    problem = make_problem(1)
+    models = fit_models(problem)
+    rps = np.array([40.0], np.float32)
+    x0 = np.array([4.0, 500.0], np.float32)
+    if backend == "slsqp":
+        a, score = problem.solve_slsqp(models, rps, x0, 8.0)
+    else:
+        a, score = problem.solve_pgd(models, rps, x0, 8.0, n_starts=8,
+                                     iters=150)
+    # optimum: cores high enough that tp >= rps, quality as high as possible
+    # while keeping completion; max score = 1.5
+    assert score >= 1.3, (a, score)
+
+
+def test_projection_feasible():
+    problem = make_problem(3)
+    import jax.numpy as jnp
+    a = jnp.asarray(np.tile([8.0, 1000.0], 3).astype(np.float32))
+    proj = np.asarray(problem.project(a, jnp.float32(8.0)))
+    assert proj[problem.resource_mask].sum() <= 8.0 + 1e-3
+    assert np.all(proj >= problem.lower - 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_assignment_feasible(seed):
+    problem = make_problem(3)
+    a = problem.random_assignment(np.random.default_rng(seed), 8.0)
+    assert a[problem.resource_mask].sum() <= 8.0 + 1e-3
+    assert np.all(a >= problem.lower - 1e-5) and np.all(a <= problem.upper + 1e-5)

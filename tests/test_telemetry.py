@@ -1,0 +1,27 @@
+import numpy as np
+
+from repro.core.telemetry import TimeSeriesDB, TrainingTable
+
+
+def test_window_mean():
+    db = TimeSeriesDB()
+    for t in range(10):
+        db.scrape("svc", t, {"tp": float(t)})
+    m = db.window_mean("svc", since=5, until=9)
+    assert m["tp"] == np.mean([5, 6, 7, 8, 9])
+    assert db.latest("svc").metrics["tp"] == 9.0
+
+
+def test_window_empty():
+    db = TimeSeriesDB()
+    assert db.window_mean("nope", 0, 10) == {}
+
+
+def test_training_table_design_matrix():
+    tab = TrainingTable()
+    tab.append("s", {"cores": 2.0, "quality": 500.0, "tp_max": 40.0})
+    tab.append("s", {"cores": 4.0, "quality": 300.0, "tp_max": 90.0})
+    tab.append("s", {"cores": 1.0})   # incomplete row ignored
+    X, Y = tab.design_matrix("s", ("cores", "quality"), "tp_max")
+    assert X.shape == (2, 2) and Y.shape == (2,)
+    assert Y[1] == 90.0
