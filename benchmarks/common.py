@@ -39,10 +39,11 @@ def load(name: str):
 
 
 def make_env(seed: int, patterns=None, replicas: int = 1,
-             capacity: float = 8.0) -> EdgeEnvironment:
+             capacity: float = 8.0, hosts: int = 1) -> EdgeEnvironment:
+    """``hosts > 1`` builds a Fleet of per-device MUDAPs (capacity each)."""
     return EdgeEnvironment(list(paper_profiles().values()),
                            {"cores": capacity}, patterns=patterns,
-                           replicas=replicas, seed=seed)
+                           replicas=replicas, seed=seed, hosts=hosts)
 
 
 def make_rask(env, seed: int, **cfg_kw) -> RASKAgent:

@@ -10,7 +10,10 @@ from . import common
 
 
 def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
-        backends=("slsqp", "pgd")):
+        backends=("slsqp", "pgd"), fleet: bool = False):
+    """``fleet=True`` spreads the replicated services over one 8-core device
+    each (a Fleet of |replicas| hosts) instead of one big device — same |S|
+    growth, per-device constraints arbitrated by the plan control plane."""
     results = {}
     for backend in backends:
         for replicas, cores in ((1, 8.0), (2, 16.0), (3, 24.0)):
@@ -18,7 +21,9 @@ def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
             for rep in range(reps):
                 patterns = common.e3_patterns("diurnal", duration, seed=rep)
                 env = common.make_env(seed=rep, patterns=patterns,
-                                      replicas=replicas, capacity=cores)
+                                      replicas=replicas,
+                                      capacity=8.0 if fleet else cores,
+                                      hosts=replicas if fleet else 1)
                 agent = common.make_rask(env, seed=rep, xi=20, eta=0.0,
                                          backend=backend)
                 runs.append(common.run_agent(env, agent, duration))
@@ -30,7 +35,7 @@ def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
                 "max_runtime_ms": float(np.max(rts)),
                 "median_fulfillment": float(np.median(fls)),
             }
-    common.save("e6_scalability", results)
+    common.save("e6_scalability_fleet" if fleet else "e6_scalability", results)
     return results
 
 

@@ -19,7 +19,8 @@ env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
 agent = RASKAgent(env.platform, paper_knowledge(),
                   RaskConfig(xi=20, eta=0.0), seed=0)
 
-# 3. 10 minutes of 1 s ticks; the agent acts every 10 s (60 cycles)
+# 3. 10 minutes of 1 s ticks; each cycle the environment calls
+#    agent.observe -> agent.decide -> platform.apply_plan (60 cycles)
 history = env.run(agent, duration_s=600.0)
 
 fulfillment = [h.fulfillment for h in history]
@@ -29,6 +30,8 @@ for h in history[::6]:
 post = fulfillment[20:]
 print(f"\npost-exploration mean fulfillment: {np.mean(post):.3f}")
 print(f"violation rate: {violation_rate(post):.1%}")
+clips = sum(len(h.receipt.clipped()) for h in history if h.receipt)
+print(f"plan entries clipped by bounds/capacity arbitration: {clips}")
 print(f"final assignments:")
 for sid in env.platform.services():
     print(f"  {sid}: { {k: round(v, 2) for k, v in env.platform.assignment(sid).items()} }")

@@ -1,7 +1,13 @@
-"""Core library: the paper's contribution (MUDAP platform + RASK agent)."""
+"""Core library: the paper's contribution (MUDAP platform + RASK agent) plus
+the declarative control plane (ScalingPlan/PlanReceipt/Agent) and the
+multi-host Fleet."""
+from .api import (Agent, APPLIED, CLIPPED, CycleResult, DecisionInfo,
+                  ParameterOutcome, PlanningAgent, PlanReceipt, REJECTED,
+                  ScalingPlan, water_fill)
 from .elasticity import ApiDescription, ElasticityParameter, ServiceId
+from .fleet import Fleet
 from .platform import MUDAP, ServiceBackend
-from .rask import CycleResult, RaskConfig, RASKAgent
+from .rask import RaskConfig, RASKAgent
 from .regression import (PolynomialModel, fit_polynomial, mse,
                          polynomial_exponents, select_degree)
 from .slo import SLO, completion, fulfillment, global_fulfillment, \
@@ -9,8 +15,11 @@ from .slo import SLO, completion, fulfillment, global_fulfillment, \
 from .solver import ServiceSpec, SolverProblem
 
 __all__ = [
+    "Agent", "APPLIED", "CLIPPED", "REJECTED", "CycleResult", "DecisionInfo",
+    "ParameterOutcome", "PlanningAgent", "PlanReceipt", "ScalingPlan",
+    "water_fill", "Fleet",
     "ApiDescription", "ElasticityParameter", "ServiceId", "MUDAP",
-    "ServiceBackend", "CycleResult", "RaskConfig", "RASKAgent",
+    "ServiceBackend", "RaskConfig", "RASKAgent",
     "PolynomialModel", "fit_polynomial", "mse", "polynomial_exponents",
     "select_degree", "SLO", "completion", "fulfillment",
     "global_fulfillment", "service_fulfillment", "violation_rate",

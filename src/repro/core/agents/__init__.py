@@ -1,4 +1,4 @@
-from .vpa import VPAAgent
+from .vpa import VPAAgent, VPAConfig
 from .dqn import DQNAgent, DQNConfig
 
-__all__ = ["VPAAgent", "DQNAgent", "DQNConfig"]
+__all__ = ["VPAAgent", "VPAConfig", "DQNAgent", "DQNConfig"]

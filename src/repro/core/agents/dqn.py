@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api import DecisionInfo, PlanningAgent, ScalingPlan
 from ..elasticity import ApiDescription
 from ..platform import MUDAP
-from ..rask import CycleResult
 from ..regression import PolynomialModel
 from ..slo import SLO
 from ..solver import COMPLETION, THROUGHPUT_MAX
@@ -141,19 +141,22 @@ class ServiceDQN:
         return num / max(den, 1e-9)
 
 
-class DQNAgent:
+class DQNAgent(PlanningAgent):
     """Pre-trained per-service DQNs acting greedily on the MUDAP platform."""
 
-    def __init__(self, platform: MUDAP, cfg: DQNConfig = DQNConfig(),
+    name = "dqn"
+
+    def __init__(self, platform: MUDAP, cfg: Optional[DQNConfig] = None,
                  seed: int = 0):
+        super().__init__()
         self.platform = platform
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else DQNConfig()
         self.rng = np.random.default_rng(seed)
         self.rounds = -1
         self.nets: Dict[str, ServiceDQN] = {}
         for i, sid in enumerate(platform.services()):
             svc = platform.service(sid)
-            self.nets[sid] = ServiceDQN(svc.api, svc.slos, cfg, seed + i)
+            self.nets[sid] = ServiceDQN(svc.api, svc.slos, self.cfg, seed + i)
 
     # -- offline pre-training in the regression-model environment --------------
     def pretrain(self, models: Mapping[str, PolynomialModel],
@@ -215,18 +218,29 @@ class DQNAgent:
         return losses
 
     # -- online: one greedy action per service per cycle -------------------------
-    def cycle(self, t: float) -> CycleResult:
+    def observe(self, t: float, window: float = 5.0
+                ) -> Dict[str, Dict[str, float]]:
+        """Stabilized state + current assignment per service (bulk query)."""
+        windowed = self.platform.window_states(since=t - window, until=t)
+        obs = {}
+        for sid in self.nets:
+            row = dict(windowed.get(sid) or {})
+            row.update(self.platform.assignment(sid))
+            obs[sid] = row
+        return obs
+
+    def decide(self, obs: Mapping[str, Mapping[str, float]]) -> ScalingPlan:
         self.rounds += 1
-        applied: Dict[str, Dict[str, float]] = {}
+        self.last_decision = DecisionInfo()
+        plan = ScalingPlan(agent=self.name, cycle=self.rounds)
         for sid, net in self.nets.items():
-            state = self.platform.window_state(sid, since=t - 5.0, until=t)
-            cur = self.platform.assignment(sid)
-            p = np.asarray([cur[n] for n in net.names], np.float32)
-            rps = float(state.get("rps", 0.0))
-            comp = float(state.get("completion", 0.0))
+            row = obs.get(sid, {})
+            p = np.asarray([row[n] for n in net.names], np.float32)
+            rps = float(row.get("rps", 0.0))
+            comp = float(row.get("completion", 0.0))
             s = net.norm_state(p, rps, comp)
             a = int(np.argmax(net.q_values(s)))
             p2 = net.apply_action(p, a)
-            applied[sid] = {n: self.platform.scale(sid, n, float(v))
-                            for n, v in zip(net.names, p2)}
-        return CycleResult(self.rounds, False, applied, 0.0)
+            for n, v in zip(net.names, p2):
+                plan.set(sid, n, float(v))
+        return plan

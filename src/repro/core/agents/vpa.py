@@ -5,15 +5,16 @@ utilization of the scheduled CPU quota between 85 % and 95 %. Outside the
 band it adjusts ``cores`` by ±0.25. It is resource-only (one elasticity
 dimension) and — as in the paper — can only claim cores that other services
 have released ("if all available resources are allocated, they can only be
-reassigned once released"); MUDAP's global-headroom clipping enforces that.
+reassigned once released"); the capacity arbitration of ``MUDAP.apply_plan``
+enforces that, since services absent from the plan keep their holdings.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Mapping, Optional
 
+from ..api import DecisionInfo, PlanningAgent, ScalingPlan
 from ..platform import MUDAP
-from ..rask import CycleResult
 
 
 @dataclasses.dataclass
@@ -24,17 +25,25 @@ class VPAConfig:
     high: float = 0.95   # above -> under-provisioned, scale up
 
 
-class VPAAgent:
-    def __init__(self, platform: MUDAP, config: VPAConfig = VPAConfig()):
+class VPAAgent(PlanningAgent):
+    name = "vpa"
+
+    def __init__(self, platform: MUDAP, config: Optional[VPAConfig] = None):
+        super().__init__()
         self.platform = platform
-        self.cfg = config
+        self.cfg = config if config is not None else VPAConfig()
         self.rounds = -1
 
-    def cycle(self, t: float) -> CycleResult:
+    def observe(self, t: float, window: float = 5.0
+                ) -> Dict[str, Dict[str, float]]:
+        return self.platform.window_states(since=t - window, until=t)
+
+    def decide(self, obs: Mapping[str, Mapping[str, float]]) -> ScalingPlan:
         self.rounds += 1
-        applied: Dict[str, Dict[str, float]] = {}
+        self.last_decision = DecisionInfo()
+        plan = ScalingPlan(agent=self.name, cycle=self.rounds)
         for sid in self.platform.services():
-            state = self.platform.window_state(sid, since=t - 5.0, until=t)
+            state = obs.get(sid) or {}
             if not state:
                 continue
             alloc = self.platform.assignment(sid).get(self.cfg.resource)
@@ -45,11 +54,7 @@ class VPAAgent:
                 used = state.get("cores_used", 0.0)
                 util = used / max(alloc, 1e-9)
             if util > self.cfg.high:
-                new = alloc + self.cfg.step
+                plan.set(sid, self.cfg.resource, alloc + self.cfg.step)
             elif util < self.cfg.low:
-                new = alloc - self.cfg.step
-            else:
-                continue
-            applied[sid] = {self.cfg.resource:
-                            self.platform.scale(sid, self.cfg.resource, new)}
-        return CycleResult(self.rounds, False, applied, 0.0)
+                plan.set(sid, self.cfg.resource, alloc - self.cfg.step)
+        return plan

@@ -1,0 +1,157 @@
+"""Fleet — several MUDAP hosts behind one control plane.
+
+The paper's platform manages one edge device; the ROADMAP north star is many
+services spread over many devices. ``Fleet`` keeps the per-host MUDAPs (each
+with its *own* capacity C and water-filling arbitration) and adds:
+
+* **placement** — ``place()`` registers a service on an explicit host or on
+  the least-loaded one (largest fractional resource headroom);
+* **plan routing** — ``apply_plan`` splits a fleet-wide ``ScalingPlan`` by
+  placement, applies each host's sub-plan transactionally, and merges the
+  per-host ``PlanReceipt``s, so an agent proposes one plan for 9+ services
+  across 3 devices exactly like it does for 3 services on one;
+* **aggregate views** — ``capacity`` (summed budgets, the relaxation the
+  RASK solver optimizes against; per-host limits stay enforced at apply
+  time, with clips reported in the receipt), bulk ``window_states``, and
+  the same registry/telemetry surface as a single MUDAP, so every agent
+  runs unmodified on a fleet.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from .api import ParameterOutcome, PlanReceipt, REASON_UNKNOWN_SERVICE, \
+    REJECTED, ScalingPlan
+from .elasticity import ApiDescription, ServiceId
+from .platform import MUDAP, ManagedService, ServiceBackend
+from .slo import SLO
+
+
+class Fleet:
+    """Multi-host control plane with the single-host MUDAP surface."""
+
+    def __init__(self, hosts: Sequence[MUDAP]):
+        self._hosts: Dict[str, MUDAP] = {}
+        for h in hosts:
+            if h.host in self._hosts:
+                raise ValueError(f"duplicate host {h.host!r}")
+            self._hosts[h.host] = h
+        self._placement: Dict[str, str] = {}  # sid -> host name
+        for name, h in self._hosts.items():   # adopt pre-registered services
+            for sid in h.services():
+                self._placement[sid] = name
+
+    # -- topology -------------------------------------------------------------
+    def hosts(self) -> List[MUDAP]:
+        return list(self._hosts.values())
+
+    def host_of(self, sid: str) -> MUDAP:
+        return self._hosts[self._placement[str(sid)]]
+
+    @property
+    def capacity(self) -> Dict[str, float]:
+        """Fleet-aggregate resource budget (the solver's relaxed constraint)."""
+        total: Dict[str, float] = {}
+        for h in self._hosts.values():
+            for r, c in h.capacity.items():
+                total[r] = total.get(r, 0.0) + c
+        return total
+
+    # -- placement ------------------------------------------------------------
+    def place(self, sid: ServiceId, api: ApiDescription,
+              backend: ServiceBackend, slos: List[SLO],
+              assignment: Optional[Dict[str, float]] = None,
+              host: Optional[str] = None) -> str:
+        """Register a service on ``host`` (or the least-loaded host) and
+        record the placement; returns the chosen host name."""
+        if host is None:
+            host = self._least_loaded()
+        if host not in self._hosts:
+            raise KeyError(f"unknown host {host!r}")
+        self._hosts[host].register(sid, api, backend, slos, assignment)
+        self._placement[str(sid)] = host
+        return host
+
+    def _least_loaded(self) -> str:
+        """Host with the largest worst-case fractional headroom (ties broken
+        by service count, then name, for determinism)."""
+        def score(h: MUDAP):
+            fracs = []
+            for r, cap in h.capacity.items():
+                used = sum(h.assignment(s).get(r, 0.0) for s in h.services())
+                fracs.append((cap - used) / cap if cap > 0 else 0.0)
+            headroom = min(fracs) if fracs else 1.0
+            return (-headroom, len(h.services()), h.host)
+
+        return min(self._hosts.values(), key=score).host
+
+    def deregister(self, sid: str) -> None:
+        key = str(sid)
+        host = self._placement.pop(key, None)
+        if host is not None:
+            self._hosts[host].deregister(key)
+
+    # -- registry views --------------------------------------------------------
+    def services(self) -> List[str]:
+        return [s for h in self._hosts.values() for s in h.services()]
+
+    def service(self, sid: str) -> ManagedService:
+        return self.host_of(sid).service(sid)
+
+    def assignment(self, sid: str) -> Dict[str, float]:
+        return self.host_of(sid).assignment(sid)
+
+    def api_descriptions(self) -> Dict[str, ApiDescription]:
+        out: Dict[str, ApiDescription] = {}
+        for h in self._hosts.values():
+            out.update(h.api_descriptions())
+        return out
+
+    # -- transactional plan routing -------------------------------------------
+    def apply_plan(self, plan: ScalingPlan) -> PlanReceipt:
+        """Split by placement, apply each host's sub-plan atomically, merge
+        the receipts. Entries for unplaced services are rejected."""
+        by_host: Dict[str, ScalingPlan] = {}
+        receipt = PlanReceipt()
+        for sid, params in plan.assignments.items():
+            host = self._placement.get(sid)
+            if host is None:
+                receipt.outcomes.extend(
+                    ParameterOutcome(sid, p, float(v), None, REJECTED,
+                                     REASON_UNKNOWN_SERVICE)
+                    for p, v in params.items())
+                continue
+            sub = by_host.setdefault(
+                host, ScalingPlan(agent=plan.agent, cycle=plan.cycle))
+            for p, v in params.items():
+                sub.set(sid, p, v)
+        for host, sub in by_host.items():
+            receipt = receipt.merge(self._hosts[host].apply_plan(sub))
+        return receipt
+
+    def scale(self, sid: str, param: str, value: float) -> float:
+        """Legacy one-entry shim, routed to the owning host."""
+        return self.host_of(sid).scale(sid, param, value)
+
+    def reset_defaults(self) -> None:
+        for h in self._hosts.values():
+            h.reset_defaults()
+
+    # -- telemetry -------------------------------------------------------------
+    def scrape(self, t: float) -> None:
+        for h in self._hosts.values():
+            h.scrape(t)
+
+    def window_state(self, sid: str, since: float,
+                     until: Optional[float] = None) -> Dict[str, float]:
+        return self.host_of(sid).window_state(sid, since, until)
+
+    def window_states(self, since: float, until: Optional[float] = None
+                      ) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for h in self._hosts.values():
+            out.update(h.window_states(since, until))
+        return out
+
+    def latest_metrics(self, sid: str) -> Dict[str, float]:
+        return self.host_of(sid).latest_metrics(sid)

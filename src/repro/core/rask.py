@@ -10,7 +10,8 @@ Per 10 s cycle the agent:
      C to the numerical solver (Eq. 4), warm-starting from the cached previous
      assignment (§IV-B3), and
   4. perturbs the solution with Gaussian action noise NOISE(a, eta) (Eq. 5)
-     before applying it through the MUDAP ScalingAPI.
+     and emits the result as a declarative ``ScalingPlan`` that MUDAP (or a
+     multi-host ``Fleet``) applies transactionally.
 
 Beyond-paper extensions (all off by default, used in EXPERIMENTS.md §Perf):
   * ``backend="pgd"`` — the vmapped multi-start JAX solver (core/solver.py);
@@ -27,6 +28,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+# CycleResult is re-exported here for seed-era callers (it moved to api.py)
+from .api import CycleResult, DecisionInfo, PlanningAgent, ScalingPlan
 from .platform import MUDAP
 from .regression import PolynomialModel, fit_polynomial, select_degree
 from .solver import ServiceSpec, SolverProblem, THROUGHPUT_MAX
@@ -54,28 +57,23 @@ class RaskConfig:
     resource: str = "cores"     # the shared-capacity resource name
 
 
-@dataclasses.dataclass
-class CycleResult:
-    rounds: int
-    explored: bool
-    assignments: Dict[str, Dict[str, float]]
-    runtime_s: float            # fit + solve duration (E4/E5/E6 metric)
-    solver_score: float = float("nan")
+class RASKAgent(PlanningAgent):
+    """The action-perception loop of Fig. 3 bound to one MUDAP platform
+    (or a multi-host ``Fleet`` — anything with the plan/telemetry surface)."""
 
-
-class RASKAgent:
-    """The action-perception loop of Fig. 3 bound to one MUDAP platform."""
+    name = "rask"
 
     def __init__(self, platform: MUDAP, knowledge: Knowledge,
-                 config: RaskConfig = RaskConfig(), seed: int = 0):
+                 config: Optional[RaskConfig] = None, seed: int = 0):
+        super().__init__()
         self.platform = platform
         self.knowledge = knowledge
-        self.cfg = config
+        self.cfg = config if config is not None else RaskConfig()
         self.rng = np.random.default_rng(seed)
         self.table = TrainingTable()
         self.rounds = -1            # Algo 1 line 2: first cycle -> 0
         self.services = platform.services()
-        self.capacity = platform.capacity[config.resource]
+        self.capacity = platform.capacity[self.cfg.resource]
         self._degrees: Dict[str, int] = {}
         self._cached_x: Optional[np.ndarray] = None
         self.problem = self._build_problem()
@@ -104,10 +102,14 @@ class RASKAgent:
 
     # -- observation (§IV-A) ---------------------------------------------------
     def observe(self, t: float, window: float = 5.0) -> Dict[str, Dict[str, float]]:
-        """Append the stabilized state of each service to D; returns the states."""
+        """Append the stabilized state of each service to D; returns the states.
+
+        All services are read with one bulk telemetry query (one lock/scan
+        instead of |S|)."""
         states = {}
+        windowed = self.platform.window_states(since=t - window, until=t)
         for sid in self.services:
-            state = self.platform.window_state(sid, since=t - window, until=t)
+            state = windowed.get(sid)
             if not state:
                 continue
             row = dict(state)
@@ -117,21 +119,24 @@ class RASKAgent:
         return states
 
     # -- Algorithm 1 ------------------------------------------------------------
-    def cycle(self, t: float) -> CycleResult:
-        self.observe(t)
+    def decide(self, obs: Mapping[str, Mapping[str, float]]) -> ScalingPlan:
+        """One RASK round: explore or fit+solve; returns the proposed plan
+        (the caller — environment or ``cycle`` — applies it)."""
+        del obs  # states were appended to D by observe()
         self.rounds += 1
         if self.rounds < self.cfg.xi:                       # lines 3-5
-            a = self.problem.random_assignment(self.rng, self.capacity)
-            applied = self._apply(a)
-            return CycleResult(self.rounds, True, applied, 0.0)
+            self.last_decision = DecisionInfo(explored=True)
+            return self._plan(
+                self.problem.random_assignment(self.rng, self.capacity))
 
         t0 = time.perf_counter()
         self._fit_models()                                  # lines 6-9
         if not self._models_complete():
             # not enough samples to fit every relation (e.g. xi=0 at cycle
             # 1): keep exploring — there is no model to solve against yet
-            a = self.problem.random_assignment(self.rng, self.capacity)
-            return CycleResult(self.rounds, True, self._apply(a), 0.0)
+            self.last_decision = DecisionInfo(explored=True)
+            return self._plan(
+                self.problem.random_assignment(self.rng, self.capacity))
         rps = np.asarray([self._latest(sid, "rps", 0.0) for sid in self.services],
                          np.float32)
         x0 = (self._cached_x if (self.cfg.cache and self._cached_x is not None)
@@ -146,9 +151,9 @@ class RASKAgent:
                                                 self.capacity)   # line 10
         self._cached_x = np.asarray(a, np.float32)          # §IV-B3 cache
         a = self._noise(a)                                  # line 11
-        runtime = time.perf_counter() - t0
-        applied = self._apply(a)
-        return CycleResult(self.rounds, False, applied, runtime, score)
+        self.last_decision = DecisionInfo(
+            explored=False, runtime_s=time.perf_counter() - t0, score=score)
+        return self._plan(a)
 
     def _models_complete(self) -> bool:
         for sid in self.services:
@@ -197,17 +202,15 @@ class RASKAgent:
         sigma = np.abs(a) * eta
         return a + self.rng.normal(0.0, 1.0, a.shape).astype(np.float32) * sigma
 
-    # -- apply via ScalingAPI (§IV-C) -----------------------------------------------
-    def _apply(self, a: np.ndarray) -> Dict[str, Dict[str, float]]:
-        applied = {}
+    # -- decision vector -> declarative plan (§IV-C, redesigned) ----------------
+    def _plan(self, a: np.ndarray) -> ScalingPlan:
+        plan = ScalingPlan(agent=self.name, cycle=self.rounds)
         for i, spec in enumerate(self.problem.specs):
             off = self.problem.offsets[i]
-            vals = {name: float(a[off + j])
-                    for j, name in enumerate(spec.param_names)}
-            applied[spec.name] = {p: self.platform.scale(spec.name, p, v)
-                                  for p, v in vals.items()}
-        return applied
+            for j, name in enumerate(spec.param_names):
+                plan.set(spec.name, name, float(a[off + j]))
+        return plan
 
     def _latest(self, sid: str, metric: str, default: float) -> float:
-        s = self.platform.db.latest(sid)
-        return float(s.metrics.get(metric, default)) if s else default
+        m = self.platform.latest_metrics(sid)
+        return float(m.get(metric, default))

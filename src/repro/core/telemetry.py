@@ -61,12 +61,51 @@ class TimeSeriesDB:
                     until: Optional[float] = None) -> Dict[str, float]:
         """Average each metric over [since, until] — paper §IV-A: 'query a time
         series of the remaining 5s and consider the average'."""
-        samples = self.window(service, since, until)
-        if not samples:
-            return {}
-        keys = set().union(*(s.metrics.keys() for s in samples))
-        return {k: float(np.mean([s.metrics[k] for s in samples if k in s.metrics]))
-                for k in keys}
+        return self.window_means([service], since, until)[service]
+
+    def window_means(self, services: Optional[Sequence[str]] = None,
+                     since: float = 0.0, until: Optional[float] = None
+                     ) -> Dict[str, Dict[str, float]]:
+        """Bulk windowed aggregation: one lock acquisition and vectorized
+        numpy reductions for *all* requested services (the agent reads every
+        service once per cycle — one query instead of |S|).
+
+        Services with no samples in the window map to ``{}``.
+        """
+        with self._lock:
+            if services is None:
+                services = list(self._series)
+            snapshot = {s: list(self._series.get(s, ())) for s in services}
+        out: Dict[str, Dict[str, float]] = {}
+        for s, samples in snapshot.items():
+            if not samples:
+                out[s] = {}
+                continue
+            ts = np.fromiter((smp.t for smp in samples), np.float64,
+                             len(samples))
+            mask = ts >= since
+            if until is not None:
+                mask &= ts <= until
+            window = [smp.metrics for smp, m in zip(samples, mask) if m]
+            if not window:
+                out[s] = {}
+                continue
+            keys = list(window[0])
+            if all(len(m) == len(keys) and keys == list(m) for m in window):
+                # fast path: homogeneous schema -> one dense matrix reduction
+                mat = np.asarray([[m[k] for k in keys] for m in window],
+                                 np.float64)
+                means = mat.mean(axis=0)
+            else:
+                keys = sorted(set().union(*(m.keys() for m in window)))
+                mat = np.full((len(window), len(keys)), np.nan, np.float64)
+                for i, m in enumerate(window):
+                    for j, k in enumerate(keys):
+                        if k in m:
+                            mat[i, j] = m[k]
+                means = np.nanmean(mat, axis=0)
+            out[s] = {k: float(v) for k, v in zip(keys, means)}
+        return out
 
 
 class TrainingTable:

@@ -127,7 +127,7 @@ def paper_knowledge() -> Dict[str, Dict[str, Sequence[str]]]:
 
 
 # --------------------------------------------------------------------------
-# LM-serving profiles (the TPU adaptation; DESIGN.md §2)
+# LM-serving profiles (the TPU-serving adaptation)
 # --------------------------------------------------------------------------
 
 _RUNG_FRACTION = {1: 0.25, 2: 0.5, 3: 0.75, 4: 1.0}   # depth/quant rung -> N_eff/N

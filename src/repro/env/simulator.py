@@ -11,20 +11,24 @@ buffer: unprocessed items queue up (and are drained later), items beyond the
 buffer are dropped — throughput/completion therefore reflect both load and
 capacity history, like the real prototype.
 
-``EdgeEnvironment`` wires profiles + workloads + a MUDAP platform and drives
-any agent with a ``cycle(t)`` method through the standard experiment loop,
-recording per-cycle Eq. (8) fulfillment — the measurement every figure of
-the paper's evaluation is built from.
+``EdgeEnvironment`` wires profiles + workloads + a control plane — one MUDAP
+host, or a multi-host ``Fleet`` when ``hosts > 1`` — and drives any ``Agent``
+(``observe``/``decide``) through the standard experiment loop: observe,
+decide a ``ScalingPlan``, apply it transactionally, record per-cycle Eq. (8)
+fulfillment — the measurement every figure of the paper's evaluation is
+built from. Legacy agents exposing only ``cycle(t)`` still work.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Mapping, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
+from ..core.api import Agent, CycleResult, DecisionInfo, PlanReceipt
 from ..core.elasticity import ServiceId
+from ..core.fleet import Fleet
 from ..core.platform import MUDAP
 from ..core.slo import SLO, global_fulfillment, service_fulfillment
 from .profiles import ServiceProfile
@@ -106,34 +110,67 @@ class CycleRecord:
     runtime_s: float
     explored: bool
     rps: Dict[str, float]
+    receipt: Optional[PlanReceipt] = None
 
 
 class EdgeEnvironment:
-    """One Edge device: MUDAP + simulated services + request workloads."""
+    """One or more Edge devices: control plane + simulated services +
+    request workloads.
+
+    With ``hosts == 1`` the platform is a single ``MUDAP``; with
+    ``hosts > 1`` it is a ``Fleet`` of per-device MUDAPs (each with its own
+    ``capacity``) and containers are placed round-robin across devices —
+    the E6-style 9-services-on-3-devices scenario is
+    ``EdgeEnvironment(profiles, {"cores": 8.0}, replicas=3, hosts=3)``.
+    """
 
     def __init__(self, profiles: Sequence[ServiceProfile],
                  capacity: Mapping[str, float],
                  patterns: Optional[Mapping[str, Pattern]] = None,
-                 replicas: int = 1, host: str = "edge-0", seed: int = 0):
+                 replicas: int = 1, host: str = "edge-0", seed: int = 0,
+                 hosts: int = 1):
         """``replicas`` spawns N independent containers per profile (E6)."""
-        self.platform = MUDAP(capacity, host=host)
+        self.platform: Union[MUDAP, Fleet]
+        if hosts <= 1:
+            hostnames = [host]
+            self.platform = MUDAP(capacity, host=host)
+        else:
+            if host != "edge-0":
+                raise ValueError(
+                    "hosts > 1 generates edge-0..edge-N-1 device names; "
+                    "a custom `host` name cannot be honored")
+            hostnames = [f"edge-{i}" for i in range(hosts)]
+            self.platform = Fleet([MUDAP(capacity, host=h)
+                                   for h in hostnames])
         self.services: Dict[str, SimulatedService] = {}
         self.patterns: Dict[str, Pattern] = {}
         rng = np.random.default_rng(seed)
         n_total = len(profiles) * replicas
+        # containers are placed round-robin; each starts with an equal share
+        # of its *device's* resources (§V-B(c))
+        per_host = {h: 0 for h in hostnames}
+        for i in range(n_total):
+            per_host[hostnames[i % len(hostnames)]] += 1
+        i = 0
         for profile in profiles:
             for r in range(replicas):
-                sid = ServiceId(host, profile.type, f"c{r}")
+                hostname = hostnames[i % len(hostnames)]
+                i += 1
+                sid = ServiceId(hostname, profile.type, f"c{r}")
                 key = str(sid)
                 backend = SimulatedService(
                     profile, np.random.default_rng(rng.integers(2 ** 31)))
-                # equal initial share of each global resource (§V-B(c))
                 defaults = dict(profile.defaults)
                 for res, cap in capacity.items():
                     if res in profile.api.names:
-                        defaults[res] = cap / n_total
-                self.platform.register(sid, profile.api, backend,
-                                       list(profile.slos), defaults)
+                        defaults[res] = cap / per_host[hostname]
+                if isinstance(self.platform, Fleet):
+                    self.platform.place(sid, profile.api, backend,
+                                        list(profile.slos), defaults,
+                                        host=hostname)
+                else:
+                    self.platform.register(sid, profile.api, backend,
+                                           list(profile.slos), defaults)
                 self.services[key] = backend
                 pat = (patterns or {}).get(profile.type)
                 self.patterns[key] = pat if pat else constant(profile.default_rps)
@@ -143,10 +180,11 @@ class EdgeEnvironment:
     def measured_fulfillment(self, window: float = 5.0) -> (float, Dict[str, float]):
         per_service = {}
         metrics_list, slo_list = [], []
+        states = self.platform.window_states(since=self.t - window,
+                                             until=self.t)
         for key in self.platform.services():
             svc = self.platform.service(key)
-            state = self.platform.window_state(key, since=self.t - window,
-                                               until=self.t)
+            state = states.get(key)
             if not state:
                 continue
             metrics_list.append(state)
@@ -155,6 +193,20 @@ class EdgeEnvironment:
         if not metrics_list:
             return 1.0, per_service
         return float(global_fulfillment(metrics_list, slo_list)), per_service
+
+    # -- one agent cycle through the unified protocol ---------------------------
+    def _drive(self, agent) -> CycleResult:
+        """observe -> decide -> apply_plan for ``Agent``s; legacy agents
+        exposing only ``cycle(t)`` are still driven through it."""
+        if isinstance(agent, Agent):
+            obs = agent.observe(self.t)
+            plan = agent.decide(obs)
+            receipt = self.platform.apply_plan(plan)
+            info = getattr(agent, "last_decision", None) or DecisionInfo()
+            return CycleResult(getattr(agent, "rounds", -1), info.explored,
+                               receipt.applied(), info.runtime_s, info.score,
+                               receipt=receipt)
+        return agent.cycle(self.t)
 
     # -- main loop ----------------------------------------------------------------
     def run(self, agent, duration_s: float, cycle_s: float = 10.0,
@@ -168,13 +220,14 @@ class EdgeEnvironment:
                 backend.tick(self.t)
             self.platform.scrape(self.t)
             if step % int(cycle_s) == 0:
-                result = agent.cycle(self.t)
+                result = self._drive(agent)
                 fulfillment, per_service = self.measured_fulfillment()
                 rec = CycleRecord(
                     self.t, fulfillment, per_service,
                     result.runtime_s if result else 0.0,
                     result.explored if result else False,
-                    {k: self.services[k].rps for k in self.services})
+                    {k: self.services[k].rps for k in self.services},
+                    receipt=result.receipt if result else None)
                 history.append(rec)
                 if on_cycle:
                     on_cycle(rec)

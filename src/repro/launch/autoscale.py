@@ -3,11 +3,17 @@ technique applied to the TPU-serving adaptation — experiment X1).
 
 Three LM services (gemma3-1b, qwen2-moe-a2.7b, mamba2-370m) share one pod's
 chip budget. MUDAP exposes each engine's {chips, context, rung}; RASK learns
-{chips, context, rung} -> tp_max per service from scraped metrics and
-optimizes the global SLO fulfillment under the shared chip constraint,
-exactly as it does for the paper's QR/CV/PC triple.
+{chips, context, rung} -> tp_max per service from scraped metrics, proposes
+one transactional ``ScalingPlan`` per cycle, and the platform arbitrates it
+against the shared chip constraint, exactly as it does for the paper's
+QR/CV/PC triple.
+
+With ``--hosts N`` the pod budget is split over N devices behind a ``Fleet``
+(``--replicas`` multiplies the service count), so e.g.
+``--hosts 3 --replicas 3`` runs 9 services across 3 devices under one agent.
 
     PYTHONPATH=src python -m repro.launch.autoscale --minutes 10
+    PYTHONPATH=src python -m repro.launch.autoscale --hosts 3 --replicas 3
 """
 from __future__ import annotations
 
@@ -45,6 +51,10 @@ def main(argv=None):
     ap.add_argument("--pattern", default="diurnal",
                     choices=["diurnal", "bursty"])
     ap.add_argument("--backend", default="slsqp", choices=["slsqp", "pgd"])
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="edge devices behind one Fleet (chips split evenly)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="containers per LM service type")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -54,8 +64,10 @@ def main(argv=None):
     patterns = {p.type: pat(p.default_rps * 2.5, duration_s=duration,
                             seed=args.seed + i)
                 for i, p in enumerate(profiles)}
-    env = EdgeEnvironment(profiles, {"chips": args.chips},
-                          patterns=patterns, seed=args.seed)
+    per_host_chips = args.chips / max(args.hosts, 1)
+    env = EdgeEnvironment(profiles, {"chips": per_host_chips},
+                          patterns=patterns, seed=args.seed,
+                          replicas=args.replicas, hosts=args.hosts)
     knowledge = {p.type: dict(p.knowledge) for p in profiles}
     agent = RASKAgent(env.platform, knowledge,
                       RaskConfig(xi=20, eta=0.0, backend=args.backend,
@@ -63,9 +75,13 @@ def main(argv=None):
     hist = env.run(agent, duration_s=duration)
     f = [h.fulfillment for h in hist]
     post = f[agent.cfg.xi:]
-    print(f"cycles={len(hist)} mean fulfillment (post-explore)="
+    capacity_clips = sum(
+        1 for h in hist if h.receipt
+        for o in h.receipt.clipped() if o.reason == "capacity")
+    print(f"services={len(env.platform.services())} hosts={args.hosts} "
+          f"cycles={len(hist)} mean fulfillment (post-explore)="
           f"{np.mean(post):.3f} violations={violation_rate(post):.2%} "
-          f"mean agent runtime="
+          f"capacity clips={capacity_clips} mean agent runtime="
           f"{np.mean([h.runtime_s for h in hist if not h.explored]) * 1e3:.0f}ms")
     return hist
 

@@ -2,7 +2,7 @@
 
 A fixed pool of decode slots; requests are admitted when a slot frees and
 the *token budget* allows. The engine exposes the elasticity parameters the
-LM profiles advertise (DESIGN.md §2):
+LM profiles advertise (see ``repro/env/profiles.py::lm_profile``):
 
   * ``chips``   -> admission token budget scales with granted chip share
   * ``context`` -> prompts are truncated to the current budget (data quality)

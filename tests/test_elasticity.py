@@ -1,5 +1,6 @@
 """Table-I API description: bounds, steps, clipping."""
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep: skip module if absent
 from hypothesis import given, strategies as st
 
 from repro.core.elasticity import ApiDescription, ElasticityParameter

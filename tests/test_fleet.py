@@ -1,0 +1,149 @@
+"""Fleet: placement, plan routing across hosts, and the unified Agent
+protocol driving RASK / DQN / VPA through one environment loop."""
+import numpy as np
+import pytest
+
+from repro.core import Agent, Fleet, MUDAP, RASKAgent, RaskConfig, ScalingPlan
+from repro.core.agents import DQNAgent, DQNConfig, VPAAgent, VPAConfig
+from repro.core.api import REASON_UNKNOWN_SERVICE
+from repro.core.elasticity import ServiceId
+from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+from repro.env.profiles import QR_PROFILE
+
+
+class FakeBackend:
+    def __init__(self):
+        self.applied = {}
+
+    def apply(self, param, value):
+        self.applied[param] = value
+
+    def metrics(self):
+        return {"tp": 1.0, **self.applied}
+
+
+def two_host_fleet():
+    return Fleet([MUDAP({"cores": 8.0}, host="edge-0"),
+                  MUDAP({"cores": 8.0}, host="edge-1")])
+
+
+def test_place_least_loaded():
+    fleet = two_host_fleet()
+    sids = []
+    for i in range(4):
+        sid = ServiceId("any", "qr-detector", f"c{i}")
+        host = fleet.place(sid, QR_PROFILE.api, FakeBackend(),
+                           list(QR_PROFILE.slos),
+                           {"cores": 2.0, "data_quality": 500.0})
+        sids.append((str(sid), host))
+    # alternates: each placement goes to the host with more headroom
+    hosts = [h for _, h in sids]
+    assert sorted(hosts) == ["edge-0", "edge-0", "edge-1", "edge-1"]
+    assert hosts[0] != hosts[1]
+    for key, host in sids:
+        assert fleet.host_of(key).host == host
+
+
+def test_place_explicit_host_and_capacity_aggregate():
+    fleet = two_host_fleet()
+    assert fleet.capacity == {"cores": 16.0}
+    sid = ServiceId("edge-1", "qr-detector", "c0")
+    assert fleet.place(sid, QR_PROFILE.api, FakeBackend(),
+                       list(QR_PROFILE.slos), host="edge-1") == "edge-1"
+    with pytest.raises(KeyError):
+        fleet.place(ServiceId("x", "qr-detector", "c1"), QR_PROFILE.api,
+                    FakeBackend(), list(QR_PROFILE.slos), host="edge-9")
+
+
+def test_fleet_plan_routing_enforces_per_host_capacity():
+    fleet = two_host_fleet()
+    keys = []
+    for i in range(4):
+        sid = ServiceId("any", "qr-detector", f"c{i}")
+        fleet.place(sid, QR_PROFILE.api, FakeBackend(), list(QR_PROFILE.slos),
+                    {"cores": 1.0, "data_quality": 500.0})
+        keys.append(str(sid))
+    # every service asks for the full device: arbitration happens per host
+    plan = ScalingPlan({k: {"cores": 8.0} for k in keys})
+    plan.set("nowhere/ghost/c0", "cores", 1.0)
+    receipt = fleet.apply_plan(plan)
+    assert receipt.outcome("nowhere/ghost/c0",
+                           "cores").reason == REASON_UNKNOWN_SERVICE
+    for host in fleet.hosts():
+        used = sum(host.assignment(s).get("cores", 0.0)
+                   for s in host.services())
+        assert used <= 8.0 + 1e-6
+        # both residents of a host got the same water-filled share
+        shares = [receipt.outcome(s, "cores").applied
+                  for s in host.services()]
+        assert shares[0] == pytest.approx(shares[1])
+        assert sum(shares) == pytest.approx(8.0)
+
+
+def test_fleet_deregister_and_views():
+    fleet = two_host_fleet()
+    sid = ServiceId("edge-0", "qr-detector", "c0")
+    fleet.place(sid, QR_PROFILE.api, FakeBackend(), list(QR_PROFILE.slos),
+                host="edge-0")
+    key = str(sid)
+    assert key in fleet.services()
+    assert fleet.service(key).api is QR_PROFILE.api
+    fleet.scrape(1.0)
+    assert fleet.latest_metrics(key)["tp"] == 1.0
+    assert fleet.window_states(since=0.0)[key]["tp"] == 1.0
+    fleet.deregister(key)
+    assert key not in fleet.services()
+
+
+# -- the unified Agent protocol ------------------------------------------------
+
+def test_all_agents_speak_the_protocol():
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          seed=0)
+    rask = RASKAgent(env.platform, paper_knowledge(), RaskConfig(xi=2), seed=0)
+    dqn = DQNAgent(env.platform, DQNConfig(train_steps=1), seed=0)
+    vpa = VPAAgent(env.platform, VPAConfig())
+    for agent in (rask, dqn, vpa):
+        assert isinstance(agent, Agent)
+        obs = agent.observe(5.0)
+        plan = agent.decide(obs)
+        assert isinstance(plan, ScalingPlan)
+
+
+@pytest.mark.parametrize("make_agent", [
+    lambda env: RASKAgent(env.platform, paper_knowledge(), RaskConfig(xi=3),
+                          seed=0),
+    lambda env: DQNAgent(env.platform, DQNConfig(train_steps=1), seed=0),
+    lambda env: VPAAgent(env.platform),
+], ids=["rask", "dqn", "vpa"])
+def test_environment_drives_any_agent_on_a_fleet(make_agent):
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          hosts=2, seed=0)
+    agent = make_agent(env)
+    hist = env.run(agent, duration_s=60)
+    assert len(hist) == 6
+    for sid in env.platform.services():
+        api = env.platform.service(sid).api
+        for k, v in env.platform.assignment(sid).items():
+            lo, hi = api.bounds()[k]
+            assert lo - 1e-9 <= v <= hi + 1e-9
+
+
+def test_rask_scales_nine_services_over_three_hosts():
+    """The multi-host Fleet scenario: 9 services / 3 devices, one RASK."""
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          replicas=3, hosts=3, seed=0)
+    assert len(env.platform.services()) == 9
+    assert len(env.platform.hosts()) == 3
+    agent = RASKAgent(env.platform, paper_knowledge(), RaskConfig(xi=8),
+                      seed=0)
+    assert agent.capacity == pytest.approx(24.0)      # aggregate budget
+    hist = env.run(agent, duration_s=150)
+    assert len(hist) == 15
+    assert not any(h.explored for h in hist[8:])      # RASK left exploration
+    for h in hist:
+        assert h.receipt is not None and h.receipt.ok
+    for host in env.platform.hosts():                 # per-device C holds
+        used = sum(host.assignment(s).get("cores", 0.0)
+                   for s in host.services())
+        assert used <= 8.0 + 1e-6

@@ -1,0 +1,230 @@
+"""Transactional ScalingPlan API: water-filling arbitration, receipts,
+order independence, headroom release, rollback."""
+import numpy as np
+import pytest
+
+from repro.core import MUDAP, PlanReceipt, ScalingPlan, water_fill
+from repro.core.api import APPLIED, CLIPPED, REASON_BOUNDS, REASON_CAPACITY, \
+    REASON_UNKNOWN_PARAM, REASON_UNKNOWN_SERVICE, REJECTED
+from repro.core.elasticity import ServiceId
+from repro.env.profiles import CV_PROFILE, PC_PROFILE, QR_PROFILE
+
+
+class FakeBackend:
+    def __init__(self):
+        self.applied = {}
+
+    def apply(self, param, value):
+        self.applied[param] = value
+
+    def metrics(self):
+        return {"tp": 1.0, **self.applied}
+
+
+PROFILES = {"qr-detector": QR_PROFILE, "cv-analyzer": CV_PROFILE,
+            "pc-visualizer": PC_PROFILE}
+
+
+def make_platform(order=("qr-detector", "cv-analyzer", "pc-visualizer"),
+                  capacity=8.0):
+    m = MUDAP({"cores": capacity})
+    backends = {}
+    for stype in order:
+        p = PROFILES[stype]
+        b = FakeBackend()
+        m.register(ServiceId("e", stype, "c0"), p.api, b, list(p.slos),
+                   {**p.defaults, "cores": 1.0})
+        backends[f"e/{stype}/c0"] = b
+    return m, backends
+
+
+# -- water_fill ---------------------------------------------------------------
+
+def test_water_fill_all_fit():
+    g = water_fill([2.0, 3.0], [0.0, 0.0], 8.0)
+    assert np.allclose(g, [2.0, 3.0])
+
+
+def test_water_fill_level_caps_large_demands():
+    # budget 6, demands 1/4/5: small demand fully granted, rest split evenly
+    g = water_fill([1.0, 4.0, 5.0], [0.0, 0.0, 0.0], 6.0)
+    assert np.allclose(g, [1.0, 2.5, 2.5])
+    assert np.isclose(g.sum(), 6.0)
+
+
+def test_water_fill_respects_floors():
+    g = water_fill([5.0, 5.0], [1.0, 0.0], 3.0)
+    assert g[0] >= 1.0
+    assert np.isclose(g.sum(), 3.0)
+    # over-subscribed at the floors: everyone pinned to their floor
+    g = water_fill([5.0, 5.0], [2.0, 2.0], 3.0)
+    assert np.allclose(g, [2.0, 2.0])
+
+
+def test_water_fill_order_independent():
+    rng = np.random.default_rng(0)
+    d = np.asarray([0.5, 3.0, 6.0, 2.0])
+    f = np.asarray([0.1, 0.1, 0.1, 0.1])
+    base = water_fill(d, f, 7.0)
+    for _ in range(10):
+        perm = rng.permutation(4)
+        g = water_fill(d[perm], f[perm], 7.0)
+        assert np.allclose(g, base[perm])
+
+
+# -- apply_plan arbitration ---------------------------------------------------
+
+def oversubscribed_plan():
+    return ScalingPlan({
+        "e/qr-detector/c0": {"cores": 6.0, "data_quality": 700.0},
+        "e/cv-analyzer/c0": {"cores": 5.0},
+        "e/pc-visualizer/c0": {"cores": 4.0},
+    })
+
+
+def test_over_capacity_plan_order_independent():
+    """Acceptance: identical applied assignments for >=3 services regardless
+    of registration order *and* plan iteration order."""
+    m1, _ = make_platform(("qr-detector", "cv-analyzer", "pc-visualizer"))
+    m2, _ = make_platform(("pc-visualizer", "qr-detector", "cv-analyzer"))
+    plan = oversubscribed_plan()
+    reversed_plan = ScalingPlan(
+        dict(reversed(list(oversubscribed_plan().assignments.items()))))
+    a1 = m1.apply_plan(plan).applied()
+    a2 = m2.apply_plan(reversed_plan).applied()
+    for sid in plan.assignments:
+        assert a1[sid] == pytest.approx(a2[sid])
+    # demand 15 > C=8: fully arbitrated, budget exhausted but never exceeded
+    total = sum(a1[sid]["cores"] for sid in plan.assignments)
+    assert total == pytest.approx(8.0)
+
+
+def test_receipt_records_capacity_and_bounds_reasons():
+    m, _ = make_platform()
+    r = m.apply_plan(ScalingPlan({
+        "e/qr-detector/c0": {"cores": 6.0, "data_quality": 5000.0},
+        "e/cv-analyzer/c0": {"cores": 6.0},
+        "e/pc-visualizer/c0": {"cores": 6.0},
+    }))
+    # 18 cores demanded of 8 -> every cores entry capacity-clipped
+    for sid in ("e/qr-detector/c0", "e/cv-analyzer/c0", "e/pc-visualizer/c0"):
+        o = r.outcome(sid, "cores")
+        assert o.status == CLIPPED and o.reason == REASON_CAPACITY
+        assert o.applied < o.requested
+    dq = r.outcome("e/qr-detector/c0", "data_quality")
+    assert dq.status == CLIPPED and dq.reason == REASON_BOUNDS
+    assert dq.applied == 1000.0                       # clipped to max bound
+    assert r.ok                                       # clips are not rejections
+
+
+def test_receipt_rejects_unknown_and_non_finite():
+    m, _ = make_platform()
+    r = m.apply_plan(ScalingPlan({
+        "e/ghost/c9": {"cores": 1.0},
+        "e/qr-detector/c0": {"nope": 1.0, "cores": float("nan"),
+                             "data_quality": 500.0},
+    }))
+    assert not r.ok
+    assert r.outcome("e/ghost/c9", "cores").reason == REASON_UNKNOWN_SERVICE
+    assert r.outcome("e/qr-detector/c0", "nope").reason == REASON_UNKNOWN_PARAM
+    assert r.outcome("e/qr-detector/c0", "cores").status == REJECTED
+    # the valid entry still goes through — rejects don't poison the plan
+    assert r.outcome("e/qr-detector/c0", "data_quality").status == APPLIED
+    assert m.assignment("e/qr-detector/c0")["data_quality"] == 500.0
+
+
+def test_plan_keeps_absent_services_holdings():
+    m, _ = make_platform()
+    m.apply_plan(ScalingPlan({"e/qr-detector/c0": {"cores": 5.0}}))
+    held = m.assignment("e/qr-detector/c0")["cores"]
+    assert held == pytest.approx(5.0)
+    # a plan not mentioning QR cannot take its cores
+    r = m.apply_plan(ScalingPlan({"e/cv-analyzer/c0": {"cores": 8.0}}))
+    got = r.outcome("e/cv-analyzer/c0", "cores").applied
+    assert got <= 8.0 - 5.0 - 1.0 + 1e-6              # minus PC's held 1.0
+    assert m.assignment("e/qr-detector/c0")["cores"] == pytest.approx(5.0)
+
+
+def test_deregister_releases_headroom():
+    m, _ = make_platform()
+    m.apply_plan(ScalingPlan({"e/qr-detector/c0": {"cores": 6.0}}))
+    r1 = m.apply_plan(ScalingPlan({"e/cv-analyzer/c0": {"cores": 8.0}}))
+    before = r1.outcome("e/cv-analyzer/c0", "cores").applied
+    m.deregister("e/qr-detector/c0")
+    r2 = m.apply_plan(ScalingPlan({"e/cv-analyzer/c0": {"cores": 8.0}}))
+    after = r2.outcome("e/cv-analyzer/c0", "cores").applied
+    assert after > before
+    assert after == pytest.approx(8.0 - 1.0)          # all but PC's held 1.0
+
+
+def test_scale_shim_matches_single_entry_plan():
+    m1, _ = make_platform()
+    m2, _ = make_platform()
+    v1 = m1.scale("e/cv-analyzer/c0", "cores", 99.0)
+    r = m2.apply_plan(ScalingPlan({"e/cv-analyzer/c0": {"cores": 99.0}}))
+    assert v1 == pytest.approx(r.outcome("e/cv-analyzer/c0", "cores").applied)
+    with pytest.raises(KeyError):
+        m1.scale("e/cv-analyzer/c0", "nope", 1.0)
+    with pytest.raises(KeyError):
+        m1.scale("e/ghost/c0", "cores", 1.0)
+
+
+def test_scale_all_is_order_independent():
+    m1, _ = make_platform()
+    m2, _ = make_platform()
+    a = {"e/qr-detector/c0": {"cores": 6.0}, "e/cv-analyzer/c0": {"cores": 6.0}}
+    b = {"e/cv-analyzer/c0": {"cores": 6.0}, "e/qr-detector/c0": {"cores": 6.0}}
+    r1, r2 = m1.scale_all(a), m2.scale_all(b)
+    for sid in a:
+        assert r1[sid] == pytest.approx(r2[sid])
+
+
+def test_rollback_on_backend_failure():
+    class ExplodingBackend(FakeBackend):
+        def apply(self, param, value):
+            if param == "cores" and value > 3.0:
+                raise RuntimeError("container crashed")
+            super().apply(param, value)
+
+    m = MUDAP({"cores": 8.0})
+    good = FakeBackend()
+    m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api, good,
+               list(QR_PROFILE.slos), {"cores": 1.0, "data_quality": 500.0})
+    bad = ExplodingBackend()
+    m.register(ServiceId("e", "pc-visualizer", "c0"), PC_PROFILE.api, bad,
+               list(PC_PROFILE.slos), {"cores": 1.0, "data_quality": 30.0})
+    before = m.assignment("e/qr-detector/c0")
+    with pytest.raises(RuntimeError):
+        m.apply_plan(ScalingPlan({
+            "e/qr-detector/c0": {"cores": 2.0},
+            "e/pc-visualizer/c0": {"cores": 4.0},
+        }))
+    # the partial write to the healthy service was rolled back
+    assert m.assignment("e/qr-detector/c0") == before
+    assert good.applied["cores"] == before["cores"]
+
+
+def test_register_evicts_service_on_failed_first_apply():
+    class DeadBackend(FakeBackend):
+        def apply(self, param, value):
+            raise RuntimeError("container never came up")
+
+    m = MUDAP({"cores": 8.0})
+    with pytest.raises(RuntimeError):
+        m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api,
+                   DeadBackend(), list(QR_PROFILE.slos))
+    assert m.services() == []                 # no half-configured residue
+    # the slot is genuinely free: a healthy retry succeeds
+    m.register(ServiceId("e", "qr-detector", "c0"), QR_PROFILE.api,
+               FakeBackend(), list(QR_PROFILE.slos))
+    assert m.services() == ["e/qr-detector/c0"]
+
+
+def test_receipt_applied_roundtrip():
+    m, backends = make_platform()
+    r = m.apply_plan(oversubscribed_plan())
+    assert isinstance(r, PlanReceipt)
+    for sid, params in r.applied().items():
+        for p, v in params.items():
+            assert m.assignment(sid)[p] == pytest.approx(v)
+            assert backends[sid].applied[p] == pytest.approx(v)

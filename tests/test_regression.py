@@ -1,6 +1,7 @@
 """Eq. (2) polynomial regression + E2-style degree selection."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep: skip module if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.regression import (fit_polynomial, mse, polynomial_exponents,

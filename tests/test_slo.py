@@ -1,6 +1,7 @@
 """SLO math — paper Eq. (1), (6), (8)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep: skip module if absent
 from hypothesis import given, strategies as st
 
 from repro.core.slo import (SLO, completion, fulfillment, global_fulfillment,
