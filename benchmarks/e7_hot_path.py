@@ -1,0 +1,139 @@
+"""E7 (beyond-paper): per-stage cycle hot-path latency vs |S|.
+
+The paper's E6 blames per-cycle agent runtime — "poor parallelization of the
+numerical solver" — for the ceiling on services per device.  This benchmark
+instruments every stage of the fused batched cycle engine at |S| in
+{3, 9, 27} (replicated QR/CV/PC on one device, proportional capacity):
+
+* ``telemetry`` — one full scrape (all containers, bulk ring write) and one
+  bulk ``window_states`` aggregation;
+* ``tick``      — one vectorized ``ContainerPool.tick`` of the whole fleet;
+* ``fit``       — the batched stacked ridge fit vs the seed's per-relation
+  ``fit_polynomial`` loop;
+* ``solve``     — SLSQP on the fused gather+segment_sum objective vs the
+  seed's per-service loop objective;
+* ``decide``    — the full RASK fit+solve decision, fused vs loop
+  (``RaskConfig(fused=False)``), i.e. the per-cycle agent latency E4-E6 plot.
+
+All timings are steady-state (post jit warm-up) medians.  The artifact also
+records jit trace counts over the timed window — zero recompiles after the
+first cycle at fixed padding is an acceptance gate of the fused engine.
+"""
+import time
+
+import numpy as np
+
+from repro.core.regression import TRACE_COUNTS
+
+from . import common
+
+S_LIST = (3, 9, 27)
+REPS = 20            # reps for cheap stages (telemetry / tick / fit)
+SOLVE_REPS = 5       # reps for solve / decide (SLSQP-bound)
+TRAIN_CYCLES = 30    # exploration cycles populating the training table
+# quick/CI runs save under a different name so the committed full-sweep
+# acceptance artifact is never clobbered by |S|=3 smoke data
+ARTIFACT = "e7_hot_path"
+
+
+def _bench(fn, reps: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)     # us per call
+
+
+def _trained_agent(replicas: int, fused: bool, seed: int = 0):
+    """Environment + RASK agent with a populated training table, one solve
+    cycle already done (jit warm)."""
+    env = common.make_env(seed=seed, replicas=replicas,
+                          capacity=8.0 * replicas)
+    agent = common.make_rask(env, seed=seed, xi=TRAIN_CYCLES, eta=0.0,
+                             fused=fused)
+    # TRAIN_CYCLES exploration cycles + 2 solve cycles (compile + steady)
+    env.run(agent, duration_s=(TRAIN_CYCLES + 2) * common.CYCLE_S)
+    return env, agent
+
+
+def run(s_list=None, reps=None, solve_reps=None):
+    s_list = s_list if s_list is not None else S_LIST
+    reps = reps if reps is not None else REPS
+    solve_reps = solve_reps if solve_reps is not None else SOLVE_REPS
+    results = {}
+    for s_count in s_list:
+        replicas = max(s_count // 3, 1)
+        env, agent = _trained_agent(replicas, fused=True)
+        env_l, agent_l = _trained_agent(replicas, fused=False)
+        row = {}
+
+        # telemetry: bulk scrape + bulk windowed aggregation
+        t_holder = [env.t]
+
+        def scrape():
+            t_holder[0] += 1.0
+            env.platform.scrape(t_holder[0])
+
+        row["telemetry_scrape_us"] = _bench(scrape, reps)
+        row["telemetry_window_us"] = _bench(
+            lambda: env.platform.window_states(since=t_holder[0] - 5.0,
+                                               until=t_holder[0]), reps)
+
+        # tick: one vectorized step of every container
+        row["tick_us"] = _bench(lambda: env.pool.tick(t_holder[0]), reps)
+
+        # fit: batched vs per-relation loop (same table sizes)
+        row["fit_us"] = _bench(agent._fit_models, reps)
+        row["fit_loop_us"] = _bench(agent_l._fit_models, reps)
+
+        # solve: fused vs loop objective, warm start from the cached optimum
+        rps = np.asarray([env.services[k].rps for k in agent.services],
+                         np.float32)
+        x0 = agent._cached_x
+        x0_l = agent_l._cached_x
+        row["solve_us"] = _bench(
+            lambda: agent.problem.solve_slsqp(agent.stacked, rps, x0,
+                                              agent.capacity), solve_reps)
+        row["solve_loop_us"] = _bench(
+            lambda: agent_l.problem.solve_slsqp(agent_l.models, rps, x0_l,
+                                                agent_l.capacity), solve_reps)
+
+        # decide: the full per-cycle agent latency, with recompile accounting
+        obs = agent.observe(env.t)
+        obs_l = agent_l.observe(env_l.t)
+        traces0 = dict(TRACE_COUNTS)
+        row["decide_us"] = _bench(lambda: agent.decide(obs), solve_reps)
+        row["recompiles_during_decide"] = {
+            k: TRACE_COUNTS[k] - traces0.get(k, 0) for k in TRACE_COUNTS
+            if TRACE_COUNTS[k] - traces0.get(k, 0)}
+        row["decide_loop_us"] = _bench(lambda: agent_l.decide(obs_l),
+                                       solve_reps)
+        row["decide_speedup"] = row["decide_loop_us"] / row["decide_us"]
+        row["fit_speedup"] = row["fit_loop_us"] / row["fit_us"]
+        row["solve_speedup"] = row["solve_loop_us"] / row["solve_us"]
+        results[f"S={s_count}"] = row
+    common.save(ARTIFACT, results)
+    return results
+
+
+def report(results) -> None:
+    for key, row in results.items():
+        for stage in ("telemetry_scrape", "telemetry_window", "tick"):
+            print(f"e7[{stage},{key}],{row[stage + '_us']:.0f},")
+        for stage in ("fit", "solve", "decide"):
+            print(f"e7[{stage},{key}],{row[stage + '_us']:.0f},"
+                  f"speedup={row[stage + '_speedup']:.2f}x"
+                  f" loop={row[stage + '_loop_us']:.0f}us")
+        rec = row.get("recompiles_during_decide") or {}
+        print(f"e7[recompiles,{key}],0,{sum(rec.values())}")
+
+
+def main():
+    report(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -72,6 +72,13 @@ def _report_from_artifacts(name, common) -> bool:
             print(f"e6[{k}],{v['median_runtime_ms'] * 1e3:.0f},"
                   f"{v['median_fulfillment']:.4f}")
         return True
+    if name == "e7":
+        r = common.load("e7_hot_path")
+        if not r:
+            return False
+        from . import e7_hot_path
+        e7_hot_path.report(r)
+        return True
     return False
 
 
@@ -86,12 +93,19 @@ def main() -> None:
 
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,
-                   e6_scalability, roofline)
+                   e6_scalability, e7_hot_path, roofline)
 
     if args.quick:
         common.REPS = 2
         common.E1_DURATION = 400.0
         common.E3_DURATION = 900.0
+        # CI-sized hot-path smoke: |S|=3, few cycles/reps; separate artifact
+        # so the committed full-sweep acceptance record is not overwritten
+        e7_hot_path.S_LIST = (3,)
+        e7_hot_path.REPS = 5
+        e7_hot_path.SOLVE_REPS = 3
+        e7_hot_path.TRAIN_CYCLES = 12
+        e7_hot_path.ARTIFACT = "e7_hot_path_quick"
 
     suites = {
         "e1": e1_convergence.main,
@@ -100,6 +114,7 @@ def main() -> None:
         "e4": e4_dimensions.main,
         "e5": e5_caching.main,
         "e6": e6_scalability.main,
+        "e7": e7_hot_path.main,
         "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -8,8 +8,9 @@ from .elasticity import ApiDescription, ElasticityParameter, ServiceId
 from .fleet import Fleet
 from .platform import MUDAP, ServiceBackend
 from .rask import RaskConfig, RASKAgent
-from .regression import (PolynomialModel, fit_polynomial, mse,
-                         polynomial_exponents, select_degree)
+from .regression import (BatchedFitPlan, PolynomialModel, StackedModels,
+                         fit_batched, fit_polynomial, mse,
+                         polynomial_exponents, select_degree, stack_models)
 from .slo import SLO, completion, fulfillment, global_fulfillment, \
     service_fulfillment, violation_rate
 from .solver import ServiceSpec, SolverProblem
@@ -20,8 +21,9 @@ __all__ = [
     "water_fill", "Fleet",
     "ApiDescription", "ElasticityParameter", "ServiceId", "MUDAP",
     "ServiceBackend", "RaskConfig", "RASKAgent",
-    "PolynomialModel", "fit_polynomial", "mse", "polynomial_exponents",
-    "select_degree", "SLO", "completion", "fulfillment",
+    "BatchedFitPlan", "PolynomialModel", "StackedModels", "fit_batched",
+    "fit_polynomial", "mse", "polynomial_exponents", "select_degree",
+    "stack_models", "SLO", "completion", "fulfillment",
     "global_fulfillment", "service_fulfillment", "violation_rate",
     "ServiceSpec", "SolverProblem",
 ]

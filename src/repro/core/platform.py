@@ -229,8 +229,10 @@ class MUDAP:
 
     # -- metric scraping (Fig. 2 step 3) --------------------------------------
     def scrape(self, t: float) -> None:
-        for key, svc in self._services.items():
-            self.db.scrape(key, t, svc.backend.metrics())
+        # one bulk DB write (single lock acquisition) for all containers
+        self.db.scrape_many(
+            t, {key: svc.backend.metrics()
+                for key, svc in self._services.items()})
 
     def window_state(self, sid: str, since: float,
                      until: Optional[float] = None) -> Dict[str, float]:

@@ -13,6 +13,18 @@ Per 10 s cycle the agent:
      and emits the result as a declarative ``ScalingPlan`` that MUDAP (or a
      multi-host ``Fleet``) applies transactionally.
 
+Fused cycle engine: with the default ``fused=True`` the fit+solve hot path is
+batched and shape-stable — all |S|x|K| relations are fitted in *one* vmapped
+jitted ridge solve over fixed-capacity padded design matrices (row capacity
+grows in power-of-two buckets, so the padded shape — and hence the compiled
+program — is stable across cycles), the models stay in stacked
+(``StackedModels``) form end-to-end, and the solver evaluates the fused
+gather + segment_sum objective whose graph does not grow with |S|.  The
+seed's per-relation Python loop survives behind ``fused=False`` as the e7
+benchmark baseline and parity reference.  ``self.models`` keeps the seed's
+{service: {target: PolynomialModel}} *view* (sliced out of the stack) for
+introspection and downstream consumers (e3, DQN pretraining).
+
 Beyond-paper extensions (all off by default, used in EXPERIMENTS.md §Perf):
   * ``backend="pgd"`` — the vmapped multi-start JAX solver (core/solver.py);
   * ``eta_decay`` — E1 observes "the noise should decay as the performance
@@ -31,8 +43,9 @@ import numpy as np
 # CycleResult is re-exported here for seed-era callers (it moved to api.py)
 from .api import CycleResult, DecisionInfo, PlanningAgent, ScalingPlan
 from .platform import MUDAP
-from .regression import PolynomialModel, fit_polynomial, select_degree
-from .solver import ServiceSpec, SolverProblem, THROUGHPUT_MAX
+from .regression import BatchedFitPlan, PolynomialModel, StackedModels, \
+    fit_polynomial, pad_capacity, select_degree
+from .solver import ServiceSpec, SolverProblem
 from .telemetry import TrainingTable
 
 # Structural knowledge K: per service, target -> feature parameter names.
@@ -55,6 +68,7 @@ class RaskConfig:
     pgd_starts: int = 8
     pgd_iters: int = 120
     resource: str = "cores"     # the shared-capacity resource name
+    fused: bool = True          # batched fit + fused objective (False: seed loop)
 
 
 class RASKAgent(PlanningAgent):
@@ -77,7 +91,35 @@ class RASKAgent(PlanningAgent):
         self._degrees: Dict[str, int] = {}
         self._cached_x: Optional[np.ndarray] = None
         self.problem = self._build_problem()
-        self.models: Dict[str, Dict[str, PolynomialModel]] = {}
+        self._models_loop: Dict[str, Dict[str, PolynomialModel]] = {}
+        self._models_view: Optional[Dict[str, Dict[str, PolynomialModel]]] = None
+        self.stacked: Optional[StackedModels] = None   # fused-path models
+        self._row_capacity = 0      # padded-fit bucket (power-of-two growth)
+        self._fit_plan: Optional[BatchedFitPlan] = None
+        self._fit_plan_key = None
+        # static per-relation fit metadata (feature names + scales), in the
+        # problem's global relation order
+        self._rel_static: List[Tuple[str, str, Tuple[str, ...], np.ndarray]] = []
+        for _, sid, target, _ in self.problem.relations:
+            svc = self.platform.service(sid)
+            feats = tuple(self.knowledge[svc.sid.type][target])
+            scale = np.asarray(
+                [svc.api.parameter(f).max_value for f in feats], np.float32)
+            self._rel_static.append((sid, target, feats, scale))
+
+    @property
+    def models(self) -> Dict[str, Dict[str, PolynomialModel]]:
+        """Seed-style {service: {target: PolynomialModel}} view.
+
+        In fused mode the per-relation models are sliced lazily out of the
+        stacked pytree (building them eagerly would add a host sync to every
+        cycle); in loop mode this is the dict the fit writes into.
+        """
+        if not self.cfg.fused:
+            return self._models_loop
+        if self._models_view is None and self.stacked is not None:
+            self._models_view = self.problem.models_dict(self.stacked)
+        return self._models_view if self._models_view is not None else {}
 
     # -- problem construction -------------------------------------------------
     def _build_problem(self) -> SolverProblem:
@@ -98,7 +140,7 @@ class RASKAgent(PlanningAgent):
                                     for p in api.parameters),
                 slos=tuple(svc.slos),
                 relation_features=tuple(rels)))
-        return SolverProblem(specs)
+        return SolverProblem(specs, fused=self.cfg.fused)
 
     # -- observation (§IV-A) ---------------------------------------------------
     def observe(self, t: float, window: float = 5.0) -> Dict[str, Dict[str, float]]:
@@ -122,7 +164,6 @@ class RASKAgent(PlanningAgent):
     def decide(self, obs: Mapping[str, Mapping[str, float]]) -> ScalingPlan:
         """One RASK round: explore or fit+solve; returns the proposed plan
         (the caller — environment or ``cycle`` — applies it)."""
-        del obs  # states were appended to D by observe()
         self.rounds += 1
         if self.rounds < self.cfg.xi:                       # lines 3-5
             self.last_decision = DecisionInfo(explored=True)
@@ -137,17 +178,26 @@ class RASKAgent(PlanningAgent):
             self.last_decision = DecisionInfo(explored=True)
             return self._plan(
                 self.problem.random_assignment(self.rng, self.capacity))
-        rps = np.asarray([self._latest(sid, "rps", 0.0) for sid in self.services],
-                         np.float32)
+        # rps comes from the observe() states already in hand — no extra
+        # per-service latest_metrics round-trips through the DB lock; a
+        # service with no samples in the window (paused scrapes) falls back
+        # to its last-known value rather than being solved as zero-load
+        obs = obs or {}
+        rps = np.asarray(
+            [float(obs[sid]["rps"]) if "rps" in obs.get(sid, {})
+             else float(self.platform.latest_metrics(sid).get("rps", 0.0))
+             for sid in self.services], np.float32)
+        models = self.stacked if (self.cfg.fused and self.stacked is not None) \
+            else self.models
         x0 = (self._cached_x if (self.cfg.cache and self._cached_x is not None)
               else self.problem.random_assignment(self.rng, self.capacity))
         if self.cfg.backend == "pgd":
             a, score = self.problem.solve_pgd(
-                self.models, rps, x0, self.capacity,
+                models, rps, x0, self.capacity,
                 n_starts=self.cfg.pgd_starts, iters=self.cfg.pgd_iters,
                 seed=int(self.rng.integers(2 ** 31)))
         else:
-            a, score = self.problem.solve_slsqp(self.models, rps, x0,
+            a, score = self.problem.solve_slsqp(models, rps, x0,
                                                 self.capacity)   # line 10
         self._cached_x = np.asarray(a, np.float32)          # §IV-B3 cache
         a = self._noise(a)                                  # line 11
@@ -156,6 +206,8 @@ class RASKAgent(PlanningAgent):
         return self._plan(a)
 
     def _models_complete(self) -> bool:
+        if self.cfg.fused:
+            return self.stacked is not None
         for sid in self.services:
             svc = self.platform.service(sid)
             for target in self.knowledge[svc.sid.type]:
@@ -165,10 +217,13 @@ class RASKAgent(PlanningAgent):
 
     # -- regression fitting (lines 6-9) -----------------------------------------
     def _fit_models(self) -> None:
+        if self.cfg.fused:
+            self._fit_models_batched()
+            return
         for sid in self.services:
             svc = self.platform.service(sid)
             k = self.knowledge[svc.sid.type]
-            self.models.setdefault(sid, {})
+            self._models_loop.setdefault(sid, {})
             for target, feats in k.items():
                 X, Y = self.table.design_matrix(sid, feats, target)
                 if len(Y) < 3:
@@ -176,9 +231,44 @@ class RASKAgent(PlanningAgent):
                 scale = np.asarray(
                     [svc.api.parameter(f).max_value for f in feats], np.float32)
                 degree = self._degree(sid, X, Y, scale)
-                self.models[sid][target] = fit_polynomial(
+                self._models_loop[sid][target] = fit_polynomial(
                     X, Y, degree, x_scale=scale, ridge=self.cfg.ridge,
                     features=feats, target=target)
+
+    def _fit_models_batched(self) -> None:
+        """All |S|x|K| relations in one vmapped jitted ridge solve.
+
+        Design matrices are padded to a shared power-of-two row capacity
+        (monotone per agent), so the compiled fit is reused across cycles —
+        the training table growing by one row per cycle never retraces; the
+        padding tables themselves are cached in a ``BatchedFitPlan`` and only
+        rebuilt when the capacity bucket or a per-relation degree changes.
+        Requires every relation to have >= 3 usable rows; until then the
+        agent keeps exploring (``self.stacked`` stays None).
+        """
+        data = []
+        degrees = []
+        max_rows = 0
+        for sid, target, feats, scale in self._rel_static:
+            X, Y = self.table.design_matrix(sid, feats, target)
+            if len(Y) < 3:
+                self.stacked = None
+                return
+            max_rows = max(max_rows, len(Y))
+            degrees.append(self._degree(sid, X, Y, scale))
+            data.append((X, Y))
+        self._row_capacity = max(self._row_capacity, pad_capacity(max_rows))
+        key = (self._row_capacity, tuple(degrees))
+        if self._fit_plan_key != key:
+            self._fit_plan = BatchedFitPlan(
+                [dict(n_features=len(feats), degree=d, x_scale=scale,
+                      service=sid, target=target, features=feats)
+                 for (sid, target, feats, scale), d
+                 in zip(self._rel_static, degrees)],
+                row_capacity=self._row_capacity, ridge=self.cfg.ridge)
+            self._fit_plan_key = key
+        self.stacked = self._fit_plan.fit(data)
+        self._models_view = None          # seed-style view rebuilt lazily
 
     def _degree(self, sid: str, X, Y, scale) -> int:
         if self.cfg.delta_per_service and sid in self.cfg.delta_per_service:
@@ -210,7 +300,3 @@ class RASKAgent(PlanningAgent):
             for j, name in enumerate(spec.param_names):
                 plan.set(spec.name, name, float(a[off + j]))
         return plan
-
-    def _latest(self, sid: str, metric: str, default: float) -> float:
-        m = self.platform.latest_metrics(sid)
-        return float(m.get(metric, default))

@@ -14,9 +14,34 @@ Terms are enumerated statically (all exponent tuples with total degree
 <= delta, like sklearn's PolynomialFeatures with bias) and the per-term
 product is unrolled in Python, which sidesteps the 0**0 autodiff singularity
 of ``jnp.power`` with array exponents.
+
+Batched (stacked) representation
+--------------------------------
+``StackedModels`` holds *all* |S|x|K| structural relations of a problem as one
+padded pytree so the whole fit+predict hot path is a single XLA dispatch:
+
+* ``w``         (R, T_max)        — per-relation weights, zero on padded terms;
+* ``exponents`` (R, T_max, F_max) — int32 term exponents, zero on padding;
+* ``term_mask`` (R, T_max)        — 1.0 on real terms, 0.0 on padding;
+* ``x_scale``   (R, F_max)        — feature conditioning, 1.0 on padding.
+
+Padding invariants: a padded *feature* column has exponent 0 everywhere, so
+its (arbitrary) value contributes a factor of 1; a padded *term* has
+``term_mask == 0`` so its feature column in the design matrix is zeroed and
+the ridge term pins its weight to exactly 0.  All arrays are jit *leaves*
+(traced), so refits with new data — or even new exponent values at the same
+(R, T_max, F_max) shape — never recompile.
+
+``fit_batched`` solves every relation's ridge system in one ``vmap``ped jitted
+call over fixed-capacity padded design matrices (``row_mask`` marks the real
+rows), so training-table growth within a capacity bucket never recompiles and
+fitting |S|x|K| relations is one dispatch instead of a Python loop.  Powers
+are computed by cumulative products + gather (no ``jnp.power``), keeping the
+expansion differentiable everywhere and bit-compatible with ``_expand``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from functools import partial
@@ -25,6 +50,11 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# jit trace counters (incremented at *trace* time, i.e. on compilation of a
+# new shape/static combination) — the no-recompile regression tests assert
+# these stay flat across cycles once the padded shapes stabilize.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 def polynomial_exponents(n_features: int, degree: int) -> np.ndarray:
@@ -139,3 +169,226 @@ def select_degree(X, Y, degrees: Sequence[int] = (1, 2, 3, 4, 5, 6),
         errs[d] = mse(m, Xte, Yte)
     best = min(errs, key=errs.get)
     return best, errs
+
+
+# --------------------------------------------------------------------------
+# Stacked (batched) representation: all |S|x|K| relations as one pytree
+# --------------------------------------------------------------------------
+
+def _expand_gather(x, exponents, max_degree: int):
+    """delta(x) for a traced exponent table — map (N, F) -> (N, T).
+
+    Powers x^0..x^max_degree are built by cumulative products (same
+    multiplication order as ``_expand``), then gathered per (term, feature)
+    and multiplied out.  Fully differentiable: no ``jnp.power``, no 0**0.
+    """
+    n, f = x.shape
+    t = exponents.shape[0]
+    pows = jnp.cumprod(jnp.broadcast_to(x[:, None, :], (n, max_degree, f)),
+                       axis=1) if max_degree else jnp.zeros((n, 0, f), x.dtype)
+    pows = jnp.concatenate([jnp.ones((n, 1, f), x.dtype), pows], axis=1)
+    idx = jnp.broadcast_to(exponents[None, :, None, :], (n, t, 1, f))
+    vals = jnp.take_along_axis(
+        jnp.broadcast_to(pows[:, None, :, :], (n, t, max_degree + 1, f)),
+        idx, axis=2)[:, :, 0, :]
+    return jnp.prod(vals, axis=-1)                            # (N, T)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StackedModels:
+    """All R = |S|x|K| structural relations as one padded pytree.
+
+    See the module docstring for the padding invariants.  ``labels`` keeps
+    the static bookkeeping ((service, target, features, degree, n_terms,
+    n_features) per relation) needed to slice per-relation views back out.
+    """
+
+    w: jnp.ndarray             # (R, T_max)   zero on padded terms
+    exponents: jnp.ndarray     # (R, T_max, F_max) int32, zero on padding
+    term_mask: jnp.ndarray     # (R, T_max)   1.0 real / 0.0 padded
+    x_scale: jnp.ndarray       # (R, F_max)   1.0 on padded features
+    max_degree: int            # static: largest per-relation degree
+    labels: Tuple[Tuple[str, str, Tuple[str, ...], int, int, int], ...] = ()
+
+    @property
+    def n_relations(self) -> int:
+        return self.w.shape[0]
+
+    def predict_all(self, x):
+        """One prediction per relation: x (R, F_max) raw features -> (R,)."""
+        xs = jnp.asarray(x, jnp.float32) / self.x_scale
+        d = self.max_degree
+        phi = jax.vmap(lambda xr, er: _expand_gather(xr[None], er, d)[0])(
+            xs, self.exponents) * self.term_mask              # (R, T_max)
+        return jnp.sum(phi * self.w, axis=-1)                 # (R,)
+
+    def model(self, r: int) -> PolynomialModel:
+        """Per-relation ``PolynomialModel`` view (unpadded) — for
+        introspection, parity tests and seed-era consumers."""
+        _, target, features, degree, n_terms, n_feat = self.labels[r]
+        return PolynomialModel(
+            jnp.asarray(self.w[r, :n_terms]),
+            np.asarray(self.exponents[r, :n_terms, :n_feat], np.int32),
+            np.asarray(self.x_scale[r, :n_feat], np.float32),
+            degree, tuple(features), target)
+
+    # pytree protocol: arrays are leaves (traced — refits never recompile).
+    def tree_flatten(self):
+        return ((self.w, self.exponents, self.term_mask, self.x_scale),
+                (self.max_degree, self.labels))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, max_degree=aux[0], labels=aux[1])
+
+
+@partial(jax.jit, static_argnames=("max_degree",))
+def _fit_batched(Xp, Yp, row_mask, exponents, term_mask, n_terms, x_scale,
+                 ridge, max_degree: int):
+    TRACE_COUNTS["fit_batched"] += 1      # executed at trace time only
+
+    def one(X, Y, rm, e, tm, nt, xs):
+        Phi = _expand_gather(X / xs, e, max_degree) * tm[None, :]
+        Phi = Phi * rm[:, None]
+        A = Phi.T @ Phi
+        # same scale-aware ridge as ``_fit``; the divisor is the relation's
+        # *active* term count so padded shapes reproduce the unpadded lambda
+        lam = ridge * (1.0 + jnp.trace(A) / nt)
+        A = A + lam * jnp.eye(Phi.shape[1], dtype=Phi.dtype)
+        return jnp.linalg.solve(A, Phi.T @ (Y * rm))
+
+    return jax.vmap(one)(Xp, Yp, row_mask, exponents, term_mask,
+                         n_terms.astype(jnp.float32), x_scale)
+
+
+def pad_capacity(n: int, minimum: int = 64) -> int:
+    """Fixed-capacity bucketing for padded design matrices: the next power of
+    two >= n (>= ``minimum``), so row growth recompiles only O(log N) times."""
+    cap = minimum
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+class BatchedFitPlan:
+    """Precomputed padding tables for *repeated* batched fits.
+
+    A cycle loop refits the same relations every 10 s with one more row of
+    data; everything but the data — exponent tables, term masks, feature
+    scales, labels — is static given (degrees, features, row capacity).  The
+    plan builds those once (device-resident, so they are not re-uploaded per
+    call) and reuses preallocated host buffers for the padded design
+    matrices, making the per-cycle fit one buffer fill + one jit dispatch.
+
+    ``relations``: one dict per relation with ``n_features``, ``degree``,
+    ``x_scale`` and optional ``service`` / ``target`` / ``features`` labels.
+    """
+
+    def __init__(self, relations: Sequence[dict], row_capacity: int,
+                 ridge: float = 1e-6):
+        self.row_capacity = row_capacity
+        self.ridge = jnp.float32(ridge)
+        r_count = len(relations)
+        exps = [polynomial_exponents(int(r["n_features"]), int(r["degree"]))
+                for r in relations]
+        self.f_max = max(max(int(r["n_features"]), 1) for r in relations)
+        self.t_max = max(e.shape[0] for e in exps)
+        self.max_degree = max(int(r["degree"]) for r in relations)
+        E = np.zeros((r_count, self.t_max, self.f_max), np.int32)
+        tmask = np.zeros((r_count, self.t_max), np.float32)
+        nterms = np.zeros((r_count,), np.int32)
+        scale = np.ones((r_count, self.f_max), np.float32)
+        labels = []
+        for i, (rel, e) in enumerate(zip(relations, exps)):
+            t, f = e.shape
+            E[i, :t, :f] = e
+            tmask[i, :t] = 1.0
+            nterms[i] = t
+            scale[i, :f] = np.asarray(rel["x_scale"], np.float32)
+            labels.append((rel.get("service", ""), rel.get("target", ""),
+                           tuple(rel.get("features", ())),
+                           int(rel["degree"]), t, f))
+        self.labels = tuple(labels)
+        self._E = jnp.asarray(E)
+        self._tmask = jnp.asarray(tmask)
+        self._nterms = jnp.asarray(nterms)
+        self._scale = jnp.asarray(scale)
+        # reusable host-side padded buffers (overwritten every fit)
+        self._Xp = np.zeros((r_count, row_capacity, self.f_max), np.float32)
+        self._Yp = np.zeros((r_count, row_capacity), np.float32)
+        self._rmask = np.zeros((r_count, row_capacity), np.float32)
+
+    def fit(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
+            ) -> StackedModels:
+        """data: one (X (N_r, F_r), Y (N_r,)) pair per relation, in plan
+        order; the newest ``row_capacity`` rows win if N_r exceeds it."""
+        self._Xp[:] = 0.0
+        self._Yp[:] = 0.0
+        self._rmask[:] = 0.0
+        for i, (X, Y) in enumerate(data):
+            X = np.atleast_2d(np.asarray(X, np.float32))
+            Y = np.asarray(Y, np.float32).reshape(-1)
+            n = min(len(Y), self.row_capacity)
+            self._Xp[i, :n, :X.shape[1]] = X[-n:]
+            self._Yp[i, :n] = Y[-n:]
+            self._rmask[i, :n] = 1.0
+        w = _fit_batched(jnp.asarray(self._Xp), jnp.asarray(self._Yp),
+                         jnp.asarray(self._rmask), self._E, self._tmask,
+                         self._nterms, self._scale, self.ridge,
+                         self.max_degree)
+        return StackedModels(w, self._E, self._tmask, self._scale,
+                             self.max_degree, self.labels)
+
+
+def fit_batched(relations: Sequence[dict], ridge: float = 1e-6,
+                row_capacity: Optional[int] = None) -> StackedModels:
+    """Fit all relations' Eq. (2) ridge systems in one vmapped jitted call.
+
+    Each relation is a dict with keys ``X`` (N_r, F_r), ``Y`` (N_r,),
+    ``degree``, ``x_scale`` (F_r,), and optional ``service`` / ``target`` /
+    ``features`` labels.  One-shot convenience wrapper over
+    ``BatchedFitPlan`` (which is what a cycle loop should hold on to);
+    per-relation results match ``fit_polynomial`` on the unpadded data.
+    """
+    if not relations:
+        raise ValueError("fit_batched needs at least one relation")
+    data = []
+    metas = []
+    n_max = 0
+    for r in relations:
+        X = np.atleast_2d(np.asarray(r["X"], np.float32))
+        Y = np.asarray(r["Y"], np.float32).reshape(-1)
+        n_max = max(n_max, len(Y))
+        data.append((X, Y))
+        metas.append(dict(r, n_features=X.shape[1]))
+    cap = row_capacity if row_capacity is not None else pad_capacity(n_max)
+    if cap < n_max:
+        raise ValueError(f"row_capacity {cap} < largest relation ({n_max} rows)")
+    return BatchedFitPlan(metas, row_capacity=cap, ridge=ridge).fit(data)
+
+
+def stack_models(models: Sequence[PolynomialModel],
+                 services: Sequence[str] = ()) -> StackedModels:
+    """Pad already-fitted per-relation models into one ``StackedModels``."""
+    if not models:
+        raise ValueError("stack_models needs at least one model")
+    r_count = len(models)
+    t_max = max(m.w.shape[0] for m in models)
+    f_max = max(m.exponents.shape[1] for m in models)
+    d_max = max(m.degree for m in models)
+    w = np.zeros((r_count, t_max), np.float32)
+    E = np.zeros((r_count, t_max, f_max), np.int32)
+    tmask = np.zeros((r_count, t_max), np.float32)
+    scale = np.ones((r_count, f_max), np.float32)
+    labels = []
+    svc = list(services) if services else [""] * r_count
+    for i, m in enumerate(models):
+        t, f = m.exponents.shape
+        w[i, :t] = np.asarray(m.w, np.float32)
+        E[i, :t, :f] = m.exponents
+        tmask[i, :t] = 1.0
+        scale[i, :f] = m.x_scale
+        labels.append((svc[i], m.target, tuple(m.features), m.degree, t, f))
+    return StackedModels(jnp.asarray(w), jnp.asarray(E), jnp.asarray(tmask),
+                         jnp.asarray(scale), d_max, tuple(labels))

@@ -11,32 +11,53 @@ Two interchangeable backends:
   caller (RASK passes the previous assignment as x0).
 
 * ``solve_pgd`` — the beyond-paper backend: projected-gradient ascent with K
-  random restarts, fully ``jit``/``vmap``-compiled. The paper's E4/E6 flag the
-  sequential solver as the scaling bottleneck ("poor parallelization of the
-  numerical solver"); this backend amortizes one compile across all cycles and
-  runs every restart in parallel. Projection onto the box/halfspace
-  intersection is exact (bisection on the KKT multiplier, i.e. water-filling).
+  random restarts, fully ``jit``/``vmap``-compiled. Projection onto the
+  box/halfspace intersection is exact (bisection on the KKT multiplier,
+  i.e. water-filling).
 
-The objective is built *once* per problem structure; regression weights and
-per-service RPS are traced arguments, so RASK's per-cycle refits never trigger
-recompilation.
+Fused objective (the E6 fix)
+----------------------------
+The seed built Eq. (4) as a Python loop over services with dict lookups —
+an XLA graph that *grew* (and recompiled) with |S|, the exact "poor
+parallelization of the numerical solver" the paper's E6 flags.  The default
+objective is now fused over the ``StackedModels`` pytree
+(core/regression.py): one gather pulls every relation's features out of the
+decision vector (R, F_max), one batched polynomial evaluation yields all
+predictions (R,), per-SLO phi is computed from padded per-relation
+predictions with pure array selects, and per-service totals come from one
+``segment_sum``.  The graph size is constant in |S|; SLSQP gradients and the
+PGD backend compile once per problem *shape* — regression weights, exponent
+tables and per-service RPS are all traced arguments, so per-cycle refits
+(even with changed degrees at the same padding) never recompile.
+
+The seed's per-service loop objective survives as ``objective_loop`` (used
+by the parity tests and the e7 benchmark's pre-PR baseline); construct
+``SolverProblem(specs, fused=False)`` to solve against it.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.optimize
 
-from .regression import PolynomialModel
+from .regression import PolynomialModel, StackedModels, TRACE_COUNTS, \
+    stack_models
 from .slo import SLO
 
 COMPLETION = "completion"
 THROUGHPUT_MAX = "tp_max"
+
+# SLO kinds in the fused phi table
+_KIND_PARAM = 0        # metric is a decision parameter: phi = min(a/target, 1)
+_KIND_COMPLETION = 1   # §V-B(a): phi = min(tp_max / (rps * target), 1)
+_KIND_RELATION = 2     # metric is a regression target: phi = min(pred/target, 1)
+
+Models = Union[Mapping[str, Mapping[str, PolynomialModel]], StackedModels]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +79,19 @@ class ServiceSpec:
 
 
 class SolverProblem:
-    """Flattens |S| services into one decision vector and builds Eq. (4)."""
+    """Flattens |S| services into one decision vector and builds Eq. (4).
 
-    def __init__(self, specs: Sequence[ServiceSpec]):
+    The fused phi table is laid out once at construction: ``relations`` fixes
+    a global relation order r = 0..R-1 (service-major), ``_rel_gather``
+    (R, F_max) indexes each relation's features in the decision vector
+    (padded features re-read index 0 — harmless, their exponent is 0), and
+    the per-SLO arrays (kind, service, weight, target, parameter index,
+    relation index) drive a branch-free phi computation.
+    """
+
+    def __init__(self, specs: Sequence[ServiceSpec], fused: bool = True):
         self.specs = list(specs)
+        self.fused = fused
         self.offsets: List[int] = []
         off = 0
         for s in self.specs:
@@ -75,17 +105,123 @@ class SolverProblem:
         mask = np.concatenate([np.asarray(s.resource_mask, bool)
                                for s in self.specs])
         self.resource_mask = mask
+        self._build_tables()
         self._slsqp_vg = jax.jit(jax.value_and_grad(self._neg_objective))
+        # fused fast path: value and gradient in ONE output array so each
+        # SLSQP iteration costs one dispatch + one device->host transfer
+        # (fetching value and gradient separately doubles the sync cost,
+        # which dominates the per-iteration time at edge problem sizes)
+        self._slsqp_vg1 = jax.jit(self._vg_cat)
+        # eager `project` dispatches its 50-step bisection op-by-op (~100 ms
+        # on an edge-class CPU); the jitted alias costs ~100 us and is used
+        # by every solve epilogue and RAND_PARAM draw
+        self._project = jax.jit(self.project)
+        self._bounds = list(zip(self.lower.tolist(), self.upper.tolist()))
         self._pgd = None  # compiled lazily (static restart count / iters)
 
-    # -- objective ---------------------------------------------------------
-    def objective(self, a, models, rps):
+    def _vg_cat(self, a, models, rps, capacity):
+        v, g = jax.value_and_grad(self._neg_objective)(a, models, rps, capacity)
+        return jnp.concatenate([jnp.reshape(v, (1,)), g])
+
+    # -- static phi/gather tables for the fused objective ---------------------
+    def _build_tables(self) -> None:
+        # global relation order: service-major, then spec order
+        self.relations: List[Tuple[int, str, str, Tuple[int, ...]]] = []
+        self._rel_index: Dict[Tuple[str, str], int] = {}
+        for i, s in enumerate(self.specs):
+            for target, feat_idx in s.relation_features:
+                self._rel_index[(s.name, target)] = len(self.relations)
+                self.relations.append((i, s.name, target, feat_idx))
+        r_count = max(len(self.relations), 1)
+        f_max = max([len(f) for *_, f in self.relations] or [1])
+        self._rel_gather = np.zeros((r_count, f_max), np.int32)
+        for r, (i, _, _, feat_idx) in enumerate(self.relations):
+            for j, p in enumerate(feat_idx):
+                self._rel_gather[r, j] = self.offsets[i] + p
+
+        kinds, svc, weight, target, pidx, ridx = [], [], [], [], [], []
+        for i, s in enumerate(self.specs):
+            rel_targets = {t for t, _ in s.relation_features}
+            for q in s.slos:
+                if q.metric in s.param_names:
+                    kinds.append(_KIND_PARAM)
+                    pidx.append(self.offsets[i] + s.param_names.index(q.metric))
+                    ridx.append(0)
+                elif q.metric == COMPLETION:
+                    kinds.append(_KIND_COMPLETION)
+                    pidx.append(0)
+                    ridx.append(self._rel_index[(s.name, THROUGHPUT_MAX)])
+                elif q.metric in rel_targets:
+                    kinds.append(_KIND_RELATION)
+                    pidx.append(0)
+                    ridx.append(self._rel_index[(s.name, q.metric)])
+                else:
+                    raise KeyError(
+                        f"SLO metric {q.metric!r} of service {s.name} is "
+                        f"neither a parameter nor a regression target")
+                svc.append(i)
+                weight.append(q.weight)
+                target.append(q.target)
+        self._slo_kind = np.asarray(kinds, np.int32)
+        self._slo_service = np.asarray(svc, np.int32)
+        self._slo_weight = np.asarray(weight, np.float32)
+        self._slo_target = np.asarray(target, np.float32)
+        self._slo_pidx = np.asarray(pidx, np.int32)
+        self._slo_ridx = np.asarray(ridx, np.int32)
+
+    # -- model representation -------------------------------------------------
+    def stack(self, models: Models) -> StackedModels:
+        """Pad a seed-style ``{service: {target: model}}`` mapping into the
+        stacked pytree, in this problem's global relation order."""
+        if isinstance(models, StackedModels):
+            return models
+        return stack_models(
+            [models[name][tgt] for _, name, tgt, _ in self.relations],
+            [name for _, name, _, _ in self.relations])
+
+    # -- objective ------------------------------------------------------------
+    def objective(self, a, models: Models, rps):
         """Weighted total SLO fulfillment (higher is better).
 
         a:      (dim,) decision vector (raw parameter units)
-        models: {service: {target: PolynomialModel}} — pytree, traced weights
+        models: ``StackedModels`` (preferred) or the seed's
+                {service: {target: PolynomialModel}} mapping (converted)
         rps:    (|S|,) current request load per service
         """
+        if not self.fused:
+            return self.objective_loop(a, models, rps)
+        return self._objective_fused(a, self.stack(models), rps)
+
+    def per_service_fulfillment(self, a, models: Models, rps):
+        """Per-service weighted phi totals (|S|,) — the segment_sum the fused
+        objective is built from, exposed for diagnostics."""
+        return self._segments(a, self.stack(models), rps)
+
+    def _segments(self, a, sm: StackedModels, rps):
+        x = a[jnp.asarray(self._rel_gather)]                  # (R, F_max)
+        preds = sm.predict_all(x)                             # (R,)
+        kind = jnp.asarray(self._slo_kind)
+        tgt = jnp.asarray(self._slo_target)
+        svc_rps = rps[jnp.asarray(self._slo_service)]
+        numer = jnp.where(kind == _KIND_PARAM,
+                          a[jnp.asarray(self._slo_pidx)],
+                          preds[jnp.asarray(self._slo_ridx)])
+        denom = jnp.where(kind == _KIND_COMPLETION,
+                          jnp.maximum(svc_rps * tgt, 1e-9), tgt)
+        phi = jnp.minimum(numer / denom, 1.0)
+        return jax.ops.segment_sum(jnp.asarray(self._slo_weight) * phi,
+                                   jnp.asarray(self._slo_service),
+                                   num_segments=len(self.specs))
+
+    def _objective_fused(self, a, sm: StackedModels, rps):
+        TRACE_COUNTS["objective_fused"] += 1  # trace-time only
+        return jnp.sum(self._segments(a, sm, rps))
+
+    def objective_loop(self, a, models, rps):
+        """The seed's per-service Python-loop objective (graph grows with
+        |S|) — kept as the parity reference and e7's pre-PR baseline."""
+        if isinstance(models, StackedModels):
+            models = self.models_dict(models)
         total = 0.0
         for i, s in enumerate(self.specs):
             p = jax.lax.dynamic_slice(a, (self.offsets[i],), (s.n_params,))
@@ -111,6 +247,14 @@ class SolverProblem:
                         f"a parameter nor a regression target")
                 total = total + q.weight * phi
         return total
+
+    def models_dict(self, sm: StackedModels
+                    ) -> Dict[str, Dict[str, PolynomialModel]]:
+        """Unstack per-relation ``PolynomialModel`` views keyed like the seed."""
+        out: Dict[str, Dict[str, PolynomialModel]] = {}
+        for r, (_, name, target, _) in enumerate(self.relations):
+            out.setdefault(name, {})[target] = sm.model(r)
+        return out
 
     def _neg_objective(self, a, models, rps, capacity):
         # soft-penalized constraint keeps SLSQP's line search informative even
@@ -141,24 +285,37 @@ class SolverProblem:
         return jnp.where(mask, jnp.clip(a - lam, lo, hi), a)
 
     # -- backend 1: paper-faithful SLSQP ------------------------------------
-    def solve_slsqp(self, models, rps, x0, capacity: float,
+    def solve_slsqp(self, models: Models, rps, x0, capacity: float,
                     maxiter: int = 100) -> Tuple[np.ndarray, float]:
+        if self.fused:
+            models = self.stack(models)   # one conversion, outside the loop
         rps = jnp.asarray(rps, jnp.float32)
         cap = jnp.float32(capacity)
         mask = self.resource_mask
 
-        def f(a):
-            v, g = self._slsqp_vg(jnp.asarray(a, jnp.float32), models, rps, cap)
-            return float(v), np.asarray(g, np.float64)
+        if self.fused:
+            def f(a):
+                out = np.asarray(self._slsqp_vg1(
+                    jnp.asarray(a, jnp.float32), models, rps, cap), np.float64)
+                return out[0], out[1:]
+        else:
+            def f(a):   # seed path: two transfers per iteration
+                v, g = self._slsqp_vg(jnp.asarray(a, jnp.float32), models,
+                                      rps, cap)
+                return float(v), np.asarray(g, np.float64)
 
+        res_jac = -mask.astype(np.float64)
         cons = [{"type": "ineq",
                  "fun": lambda a: capacity - float(np.sum(a[mask])),
-                 "jac": lambda a: -mask.astype(np.float64)}]
+                 "jac": lambda a: res_jac}]
         res = scipy.optimize.minimize(
             f, np.asarray(x0, np.float64), jac=True, method="SLSQP",
-            bounds=list(zip(self.lower.tolist(), self.upper.tolist())),
-            constraints=cons, options={"maxiter": maxiter, "ftol": 1e-6})
-        a = np.asarray(self.project(jnp.asarray(res.x, jnp.float32), cap))
+            bounds=self._bounds, constraints=cons,
+            options={"maxiter": maxiter, "ftol": 1e-6})
+        # the loop baseline keeps the seed's *eager* projection epilogue so
+        # ``fused=False`` reproduces pre-PR per-cycle cost faithfully
+        proj = self._project if self.fused else self.project
+        a = np.asarray(proj(jnp.asarray(res.x, jnp.float32), cap))
         return a, -float(res.fun)
 
     # -- backend 2: beyond-paper vmapped multi-start PGD ---------------------
@@ -210,9 +367,11 @@ class SolverProblem:
 
         return run
 
-    def solve_pgd(self, models, rps, x0, capacity: float, *,
+    def solve_pgd(self, models: Models, rps, x0, capacity: float, *,
                   n_starts: int = 8, iters: int = 120, lr: float = 0.05,
                   seed: int = 0) -> Tuple[np.ndarray, float]:
+        if self.fused:
+            models = self.stack(models)
         key = (n_starts, iters, lr)
         if self._pgd is None or self._pgd[0] != key:
             self._pgd = (key, self._build_pgd(n_starts, iters, lr))
@@ -226,4 +385,4 @@ class SolverProblem:
     def random_assignment(self, rng: np.random.Generator,
                           capacity: float) -> np.ndarray:
         a = rng.uniform(self.lower, self.upper).astype(np.float32)
-        return np.asarray(self.project(jnp.asarray(a), jnp.float32(capacity)))
+        return np.asarray(self._project(jnp.asarray(a), jnp.float32(capacity)))

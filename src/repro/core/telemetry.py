@@ -3,16 +3,34 @@
 Containers are scraped every second; the agent queries a *window* of the most
 recent samples and aggregates (the paper averages the last 5 s of each 10 s
 cycle, because scaling actions take up to ~5 s to settle). The DB also serves
-as the regression training-data store D: ``training_table`` flattens the
+as the regression training-data store D: ``TrainingTable`` flattens the
 windowed aggregates of each past cycle into the tabular structure RASK fits
 its polynomials on (Fig. 3 step 1).
+
+Columnar layout (the telemetry leg of the fused cycle engine)
+-------------------------------------------------------------
+Both stores are *columnar*: one preallocated float64 array per metric with a
+shared, monotonically increasing timestamp vector — no per-sample dicts.
+
+* ``TimeSeriesDB`` keeps one ring buffer per service.  ``scrape`` writes one
+  row at the tail (amortized O(1): capacity doubles up to 2x retention, then
+  the newest ``retention`` rows are compacted to the front — timestamps stay
+  contiguous and sorted).  Window queries binary-search the timestamp vector
+  (``np.searchsorted``) and reduce a contiguous column slice with one
+  vectorized ``nanmean`` — no Python-level row scans.
+* Schema is fixed at first scrape per service; a metric appearing later adds
+  a NaN-backfilled column, a metric missing from one scrape stores NaN
+  (``nanmean`` ignores both).
+* ``TrainingTable`` is append-only column arrays (capacity-doubling), so
+  ``design_matrix`` — the feed of the batched regression's padded buffers
+  (``repro.core.regression.BatchedFitPlan``) — is a vectorized column
+  gather + finite-row mask, not a per-row dict scan.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -23,6 +41,92 @@ class Sample:
     metrics: Dict[str, float]
 
 
+class _Ring:
+    """Columnar ring buffer for one service: sorted timestamps + one column
+    per metric, amortized O(1) append, O(log n) window lookup."""
+
+    __slots__ = ("retention", "t", "vals", "cols", "colidx", "n")
+
+    def __init__(self, retention: int, initial: int = 256):
+        self.retention = retention
+        cap = min(initial, 2 * retention)
+        self.t = np.empty(cap, np.float64)
+        self.vals = np.empty((cap, 0), np.float64)
+        self.cols: List[str] = []
+        self.colidx: Dict[str, int] = {}
+        self.n = 0                       # next write position
+
+    @property
+    def count(self) -> int:
+        return min(self.n, self.retention)
+
+    @property
+    def start(self) -> int:
+        return self.n - self.count
+
+    def _ensure_capacity(self) -> None:
+        cap = self.t.shape[0]
+        if self.n < cap:
+            return
+        if cap < 2 * self.retention:     # grow geometrically up to 2x retention
+            new_cap = min(2 * cap, 2 * self.retention)
+            self.t = np.concatenate([self.t, np.empty(new_cap - cap)])
+            self.vals = np.concatenate(
+                [self.vals, np.empty((new_cap - cap, self.vals.shape[1]))])
+        else:                            # wrap: compact newest rows to front
+            keep = self.retention
+            self.t[:keep] = self.t[self.n - keep:self.n]
+            self.vals[:keep] = self.vals[self.n - keep:self.n]
+            self.n = keep
+
+    def _ensure_column(self, key: str) -> int:
+        idx = self.colidx.get(key)
+        if idx is None:
+            idx = len(self.cols)
+            self.cols.append(key)
+            self.colidx[key] = idx
+            col = np.full((self.t.shape[0], 1), np.nan)
+            self.vals = np.concatenate([self.vals, col], axis=1)
+        return idx
+
+    def append(self, t: float, metrics: Mapping[str, float]) -> None:
+        self._ensure_capacity()
+        row = np.full(len(self.cols), np.nan)
+        extra = None
+        for k, v in metrics.items():
+            idx = self.colidx.get(k)
+            if idx is None:              # schema grows: NaN-backfilled column
+                idx = self._ensure_column(k)
+                if extra is None:
+                    extra = {}
+                extra[idx] = float(v)
+            elif idx < row.shape[0]:
+                row[idx] = float(v)
+        self.t[self.n] = t
+        self.vals[self.n, :row.shape[0]] = row
+        if extra:
+            for idx, v in extra.items():
+                self.vals[self.n, idx] = v
+        self.n += 1
+
+    def window_slice(self, since: float, until: Optional[float]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        lo = self.start + np.searchsorted(self.t[self.start:self.n], since,
+                                          side="left")
+        hi = self.n if until is None else self.start + np.searchsorted(
+            self.t[self.start:self.n], until, side="right")
+        return self.t[lo:hi], self.vals[lo:hi]
+
+    def latest(self) -> Optional[Sample]:
+        if self.count == 0:
+            return None
+        i = self.n - 1
+        row = self.vals[i]
+        return Sample(float(self.t[i]),
+                      {k: float(row[j]) for j, k in enumerate(self.cols)
+                       if np.isfinite(row[j])})
+
+
 class TimeSeriesDB:
     """Append-only per-service metric store with windowed aggregation.
 
@@ -31,15 +135,23 @@ class TimeSeriesDB:
     """
 
     def __init__(self, retention: int = 100_000):
-        self._series: Dict[str, collections.deque] = {}
+        self._series: Dict[str, _Ring] = {}
         self._retention = retention
         self._lock = threading.Lock()
 
     def scrape(self, service: str, t: float, metrics: Mapping[str, float]) -> None:
+        self.scrape_many(t, {service: metrics})
+
+    def scrape_many(self, t: float,
+                    per_service: Mapping[str, Mapping[str, float]]) -> None:
+        """Bulk scrape: one lock acquisition for all services (the platform
+        scrapes every container each second — one call instead of |S|)."""
         with self._lock:
-            q = self._series.setdefault(
-                service, collections.deque(maxlen=self._retention))
-            q.append(Sample(float(t), dict(metrics)))
+            for service, metrics in per_service.items():
+                ring = self._series.get(service)
+                if ring is None:
+                    ring = self._series[service] = _Ring(self._retention)
+                ring.append(float(t), metrics)
 
     def services(self) -> List[str]:
         with self._lock:
@@ -47,15 +159,22 @@ class TimeSeriesDB:
 
     def latest(self, service: str) -> Optional[Sample]:
         with self._lock:
-            q = self._series.get(service)
-            return q[-1] if q else None
+            ring = self._series.get(service)
+            return ring.latest() if ring else None
 
     def window(self, service: str, since: float, until: Optional[float] = None
                ) -> List[Sample]:
         with self._lock:
-            q = self._series.get(service, ())
-            return [s for s in q
-                    if s.t >= since and (until is None or s.t <= until)]
+            ring = self._series.get(service)
+            if ring is None:
+                return []
+            ts, vals = ring.window_slice(since, until)
+            cols = list(ring.cols)
+            ts, vals = ts.copy(), vals.copy()
+        return [Sample(float(t),
+                       {k: float(v[j]) for j, k in enumerate(cols)
+                        if np.isfinite(v[j])})
+                for t, v in zip(ts, vals)]
 
     def window_mean(self, service: str, since: float,
                     until: Optional[float] = None) -> Dict[str, float]:
@@ -66,45 +185,34 @@ class TimeSeriesDB:
     def window_means(self, services: Optional[Sequence[str]] = None,
                      since: float = 0.0, until: Optional[float] = None
                      ) -> Dict[str, Dict[str, float]]:
-        """Bulk windowed aggregation: one lock acquisition and vectorized
-        numpy reductions for *all* requested services (the agent reads every
-        service once per cycle — one query instead of |S|).
+        """Bulk windowed aggregation: one lock acquisition, then one
+        binary-searched column-slice ``nanmean`` per service.
 
         Services with no samples in the window map to ``{}``.
         """
         with self._lock:
             if services is None:
                 services = list(self._series)
-            snapshot = {s: list(self._series.get(s, ())) for s in services}
+            slices = []
+            for s in services:
+                ring = self._series.get(s)
+                if ring is None:
+                    slices.append((s, None, ()))
+                    continue
+                ts, vals = ring.window_slice(since, until)
+                slices.append((s, vals.copy(), list(ring.cols)))
         out: Dict[str, Dict[str, float]] = {}
-        for s, samples in snapshot.items():
-            if not samples:
+        for s, vals, cols in slices:
+            if vals is None or vals.shape[0] == 0:
                 out[s] = {}
                 continue
-            ts = np.fromiter((smp.t for smp in samples), np.float64,
-                             len(samples))
-            mask = ts >= since
-            if until is not None:
-                mask &= ts <= until
-            window = [smp.metrics for smp, m in zip(samples, mask) if m]
-            if not window:
-                out[s] = {}
-                continue
-            keys = list(window[0])
-            if all(len(m) == len(keys) and keys == list(m) for m in window):
-                # fast path: homogeneous schema -> one dense matrix reduction
-                mat = np.asarray([[m[k] for k in keys] for m in window],
-                                 np.float64)
-                means = mat.mean(axis=0)
-            else:
-                keys = sorted(set().union(*(m.keys() for m in window)))
-                mat = np.full((len(window), len(keys)), np.nan, np.float64)
-                for i, m in enumerate(window):
-                    for j, k in enumerate(keys):
-                        if k in m:
-                            mat[i, j] = m[k]
-                means = np.nanmean(mat, axis=0)
-            out[s] = {k: float(v) for k, v in zip(keys, means)}
+            present = np.isfinite(vals)
+            counts = present.sum(axis=0)
+            with np.errstate(invalid="ignore"):
+                sums = np.where(present, vals, 0.0).sum(axis=0)
+            means = sums / np.maximum(counts, 1)
+            out[s] = {k: float(means[j]) for j, k in enumerate(cols)
+                      if counts[j] > 0}
         return out
 
 
@@ -113,26 +221,63 @@ class TrainingTable:
 
     Each row holds the *stabilized* metric aggregate of one autoscaling cycle
     so the regression sees (features X, target Y) pairs at cycle granularity.
+    Storage is append-only column arrays (capacity-doubling, missing fields
+    are NaN), so extracting a design matrix is a vectorized column gather.
     """
 
-    def __init__(self):
-        self._rows: Dict[str, List[Dict[str, float]]] = {}
+    def __init__(self, initial: int = 64):
+        self._initial = initial
+        self._cols: Dict[str, Dict[str, np.ndarray]] = {}
+        self._n: Dict[str, int] = {}
 
     def append(self, service: str, row: Mapping[str, float]) -> None:
-        self._rows.setdefault(service, []).append(dict(row))
+        cols = self._cols.setdefault(service, {})
+        n = self._n.get(service, 0)
+        cap = next(iter(cols.values())).shape[0] if cols else 0
+        if n >= cap:                      # all columns share one capacity
+            new_cap = max(2 * cap, self._initial)
+            for k in cols:
+                cols[k] = np.concatenate(
+                    [cols[k], np.full(new_cap - cap, np.nan, np.float32)])
+            cap = new_cap
+        for k, v in row.items():
+            if k not in cols:
+                cols[k] = np.full(cap, np.nan, np.float32)
+            cols[k][n] = float(v)
+        self._n[service] = n + 1
 
     def rows(self, service: str) -> List[Dict[str, float]]:
-        return self._rows.get(service, [])
+        """Row-dict view (reconstructed; kept for seed-era consumers)."""
+        cols = self._cols.get(service, {})
+        n = self._n.get(service, 0)
+        return [{k: float(arr[i]) for k, arr in cols.items()
+                 if np.isfinite(arr[i])} for i in range(n)]
 
     def __len__(self) -> int:
-        return sum(len(v) for v in self._rows.values())
+        return sum(self._n.values())
+
+    def count(self, service: str) -> int:
+        return self._n.get(service, 0)
+
+    def columns(self, service: str, names: Sequence[str]) -> np.ndarray:
+        """Stacked (n, len(names)) view of the named columns (NaN where a row
+        never recorded the field)."""
+        n = self._n.get(service, 0)
+        cols = self._cols.get(service, {})
+        out = np.full((n, len(names)), np.nan, np.float32)
+        for j, name in enumerate(names):
+            arr = cols.get(name)
+            if arr is not None:
+                out[:, j] = arr[:n]
+        return out
 
     def design_matrix(self, service: str, features: Sequence[str], target: str):
-        """Extract (X, Y) for one structural relation k — Algo 1 line 7."""
-        rows = [r for r in self.rows(service)
-                if target in r and all(f in r for f in features)]
-        if not rows:
-            return np.zeros((0, len(features)), np.float32), np.zeros((0,), np.float32)
-        X = np.asarray([[r[f] for f in features] for r in rows], np.float32)
-        Y = np.asarray([r[target] for r in rows], np.float32)
-        return X, Y
+        """Extract (X, Y) for one structural relation k — Algo 1 line 7.
+
+        Rows missing any feature or the target are dropped (vectorized
+        finite-mask, no per-row dict scans)."""
+        mat = self.columns(service, list(features) + [target])
+        keep = np.isfinite(mat).all(axis=1)
+        X = mat[keep, :-1]
+        Y = mat[keep, -1]
+        return np.ascontiguousarray(X), np.ascontiguousarray(Y)

@@ -1,9 +1,9 @@
 from .profiles import (CV_PROFILE, PC_PROFILE, QR_PROFILE, ServiceProfile,
                        lm_profile, paper_knowledge, paper_profiles)
-from .simulator import EdgeEnvironment, SimulatedService
+from .simulator import ContainerPool, EdgeEnvironment, SimulatedService
 from .workloads import bursty, constant, diurnal
 
 __all__ = ["ServiceProfile", "QR_PROFILE", "CV_PROFILE", "PC_PROFILE",
            "lm_profile", "paper_profiles", "paper_knowledge",
-           "EdgeEnvironment", "SimulatedService", "bursty", "constant",
-           "diurnal"]
+           "ContainerPool", "EdgeEnvironment", "SimulatedService", "bursty",
+           "constant", "diurnal"]

@@ -11,6 +11,21 @@ buffer: unprocessed items queue up (and are drained later), items beyond the
 buffer are dropped — throughput/completion therefore reflect both load and
 capacity history, like the real prototype.
 
+Vectorized container pool
+-------------------------
+All containers of one environment live in a ``ContainerPool`` — a
+structure-of-arrays store (targets/currents padded to the widest parameter
+set, rps/queue/metric vectors) whose ``tick`` steps *every* container's
+settle, queue, throughput and utilization update as batch numpy ops; only
+the per-profile hidden ``tp_max`` surface (an opaque Python callable) and
+the per-container RNG draws (kept per-container so seeded trajectories are
+reproducible regardless of pool size) remain scalar.  ``SimulatedService``
+is a per-container *view* into a pool (standalone instances own a pool of
+one), so the single-service API is unchanged while ``EdgeEnvironment.run``
+advances the whole fleet with one ``pool.tick`` per simulated second.
+Padding invariant: parameter slots beyond a container's API are masked out
+of settling and never surface in ``metrics()``.
+
 ``EdgeEnvironment`` wires profiles + workloads + a control plane — one MUDAP
 host, or a multi-host ``Fleet`` when ``hosts > 1`` — and drives any ``Agent``
 (``observe``/``decide``) through the standard experiment loop: observe,
@@ -21,8 +36,8 @@ built from. Legacy agents exposing only ``cycle(t)`` still work.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Union
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, \
+    Union
 
 import numpy as np
 
@@ -30,76 +45,234 @@ from ..core.api import Agent, CycleResult, DecisionInfo, PlanReceipt
 from ..core.elasticity import ServiceId
 from ..core.fleet import Fleet
 from ..core.platform import MUDAP
-from ..core.slo import SLO, global_fulfillment, service_fulfillment
+from ..core.slo import global_fulfillment, service_fulfillment
 from .profiles import ServiceProfile
 from .workloads import Pattern, constant
 
 
+class ContainerPool:
+    """Structure-of-arrays state for N simulated containers.
+
+    ``tick`` updates settle/queue/throughput/utilization for an index subset
+    (default: all) with vectorized numpy ops.  Containers keep their own
+    ``np.random.Generator`` and draw in a fixed order (capacity noise, then
+    utilization noise) so per-container random streams match the seed-era
+    scalar simulator exactly.
+    """
+
+    def __init__(self):
+        self.profiles: List[ServiceProfile] = []
+        self.rngs: List[np.random.Generator] = []
+        self.param_names: List[Tuple[str, ...]] = []
+        self.n = 0
+        self.p_max = 0
+        # SoA state — (N,) unless noted
+        self.settle_tau = np.zeros(0)
+        self.buffer_s = np.zeros(0)
+        self.noise = np.zeros(0)
+        self.parallel_eff = np.zeros(0)
+        self.rps = np.zeros(0)
+        self.queue = np.zeros(0)
+        self.target = np.zeros((0, 0))       # (N, P_max)
+        self.current = np.zeros((0, 0))      # (N, P_max)
+        self.res_mask = np.zeros((0, 0), bool)
+        self.present = np.zeros((0, 0), bool)
+        self.throughput = np.zeros(0)
+        self.tp_cap = np.zeros(0)
+        self.completion = np.zeros(0)
+        self.utilization = np.zeros(0)
+
+    # -- registration --------------------------------------------------------
+    def add(self, profile: ServiceProfile, rng: np.random.Generator,
+            settle_tau: float = 1.5, buffer_s: float = 3.0,
+            noise: float = 0.02) -> int:
+        i = self.n
+        names = tuple(profile.api.names)
+        self.profiles.append(profile)
+        self.rngs.append(rng)
+        self.param_names.append(names)
+        self.n += 1
+        p = max(self.p_max, len(names))
+        if self.n > self.settle_tau.shape[0] or p > self.p_max:
+            self._grow(p)   # amortized: row capacity doubles
+        self.settle_tau[i] = settle_tau
+        self.buffer_s[i] = buffer_s
+        self.noise[i] = noise
+        self.parallel_eff[i] = profile.parallel_eff
+        self.rps[i] = profile.default_rps
+        for j, name in enumerate(names):
+            self.res_mask[i, j] = profile.api.parameter(name).is_resource
+            d = profile.defaults.get(name)
+            if d is not None:
+                self.target[i, j] = self.current[i, j] = float(d)
+                self.present[i, j] = True
+        return i
+
+    def _grow(self, p_max: int) -> None:
+        # amortized doubling: rows grow geometrically, columns to the widest
+        # API seen, so N registrations cost O(N) copies, not O(N^2)
+        rows = max(2 * self.settle_tau.shape[0], self.n, 4)
+
+        def vec(a):
+            out = np.zeros(rows)
+            out[:a.shape[0]] = a
+            return out
+
+        def mat(a, fill=0.0, dtype=float):
+            out = np.full((rows, p_max), fill, dtype)
+            out[:a.shape[0], :a.shape[1]] = a
+            return out
+
+        self.settle_tau = vec(self.settle_tau)
+        self.buffer_s = vec(self.buffer_s)
+        self.noise = vec(self.noise)
+        self.parallel_eff = vec(self.parallel_eff)
+        self.rps = vec(self.rps)
+        self.queue = vec(self.queue)
+        self.throughput = vec(self.throughput)
+        self.tp_cap = vec(self.tp_cap)
+        self.completion = vec(self.completion)
+        self.utilization = vec(self.utilization)
+        self.target = mat(self.target)
+        self.current = mat(self.current)
+        self.res_mask = mat(self.res_mask, False, bool)
+        self.present = mat(self.present, False, bool)
+        self.p_max = p_max
+
+    def _col(self, i: int, param: str) -> int:
+        try:
+            return self.param_names[i].index(param)
+        except ValueError:
+            raise KeyError(param) from None
+
+    # -- per-container surface ----------------------------------------------
+    def apply(self, i: int, param: str, value: float) -> None:
+        j = self._col(i, param)
+        self.target[i, j] = float(value)
+        self.present[i, j] = True
+        if not self.res_mask[i, j]:
+            self.current[i, j] = float(value)  # config switches are immediate
+
+    def param_dict(self, i: int) -> Dict[str, float]:
+        return {name: float(self.current[i, j])
+                for j, name in enumerate(self.param_names[i])
+                if self.present[i, j]}
+
+    def metrics(self, i: int) -> Dict[str, float]:
+        return {
+            "rps": float(self.rps[i]),
+            "throughput": float(self.throughput[i]),
+            "tp_max": float(self.tp_cap[i]),     # from per-item latency, §V-B(a)
+            "completion": float(self.completion[i]),
+            "queue": float(self.queue[i]),
+            "cpu_utilization": float(self.utilization[i]),
+            **self.param_dict(i),
+        }
+
+    # -- simulation ----------------------------------------------------------
+    def tick(self, t: float, dt: float = 1.0,
+             idx: Optional[Sequence[int]] = None) -> None:
+        """Advance the selected containers (default: all) by one step —
+        settle, hidden capacity, queue/throughput, utilization — with batch
+        numpy ops; only ``tp_max`` surfaces and RNG draws stay per-container."""
+        del t  # dynamics are time-invariant; t kept for API symmetry
+        ids = np.arange(self.n) if idx is None else np.asarray(idx, int)
+        if ids.size == 0:
+            return
+        # settle resource params toward their targets (tau~1.5 s -> ~5 s to
+        # converge, §IV: "processing services stabilized in less than 5s")
+        alpha = 1.0 - np.exp(-dt / self.settle_tau[ids])
+        cur = self.current[ids]
+        step = (self.target[ids] - cur) * alpha[:, None]
+        self.current[ids] = np.where(self.res_mask[ids] & self.present[ids],
+                                     cur + step, cur)
+
+        # hidden capacity: opaque per-profile surface + multiplicative noise
+        caps = np.empty(ids.size)
+        for k, i in enumerate(ids):
+            caps[k] = self.profiles[i].tp_max(self.param_dict(int(i)))
+        draws = np.array([self.rngs[int(i)].normal(1.0, self.noise[int(i)])
+                          for i in ids])
+        caps *= np.maximum(draws, 0.0)
+
+        rps = self.rps[ids]
+        arrivals = rps * dt
+        work = self.queue[ids] + arrivals
+        processed = np.minimum(work, caps * dt)
+        self.queue[ids] = np.minimum(work - processed,
+                                     rps * self.buffer_s[ids])  # bounded buffer
+        throughput = processed / dt
+        live = rps > 0
+        completion = np.ones(ids.size)
+        np.divide(throughput, rps, out=completion, where=live)
+        completion = np.minimum(completion, 1.0)
+        saturation = np.minimum(rps / np.maximum(caps, 1e-9), 1.0)
+        # when saturated the container burns parallel_eff of its allocation;
+        # when idle, usage tracks offered load
+        udraws = np.array([self.rngs[int(i)].normal(1.0, 1.0) for i in ids])
+        utilization = np.clip(
+            self.parallel_eff[ids] * saturation + 0.02 * udraws, 0.0, 1.0)
+
+        self.throughput[ids] = throughput
+        self.tp_cap[ids] = caps
+        self.completion[ids] = completion
+        self.utilization[ids] = utilization
+
+
 class SimulatedService:
-    """ServiceBackend implementation: one containerized stream processor."""
+    """ServiceBackend implementation: one containerized stream processor.
+
+    A thin per-container view into a ``ContainerPool`` — standalone
+    construction owns a private pool of one, ``EdgeEnvironment`` shares one
+    pool across all containers and ticks it in bulk.
+    """
 
     def __init__(self, profile: ServiceProfile, rng: np.random.Generator,
                  settle_tau: float = 1.5, buffer_s: float = 3.0,
-                 noise: float = 0.02):
+                 noise: float = 0.02, pool: Optional[ContainerPool] = None):
         self.profile = profile
-        self.rng = rng
-        self.settle_tau = settle_tau
-        self.noise = noise
-        # resource params settle exponentially (tau~1.5 s -> ~5 s to converge,
-        # §IV: "processing services stabilized in less than 5s")
-        self.target: Dict[str, float] = dict(profile.defaults)
-        self.current: Dict[str, float] = dict(profile.defaults)
-        self.rps: float = profile.default_rps
-        self.queue: float = 0.0
-        self.buffer_s = buffer_s
-        self._last: Dict[str, float] = {}
+        self.pool = pool if pool is not None else ContainerPool()
+        self.i = self.pool.add(profile, rng, settle_tau, buffer_s, noise)
         self.tick(0.0)
 
     # -- ServiceBackend ------------------------------------------------------
     def apply(self, param: str, value: float) -> None:
-        self.target[param] = float(value)
-        p = self.profile.api.parameter(param)
-        if not p.is_resource:
-            self.current[param] = float(value)   # config switches are immediate
+        self.pool.apply(self.i, param, value)
 
     def metrics(self) -> Dict[str, float]:
-        return dict(self._last)
+        return self.pool.metrics(self.i)
+
+    # -- pool-backed state views ---------------------------------------------
+    @property
+    def rps(self) -> float:
+        return float(self.pool.rps[self.i])
+
+    @rps.setter
+    def rps(self, value: float) -> None:
+        self.pool.rps[self.i] = float(value)
+
+    @property
+    def queue(self) -> float:
+        return float(self.pool.queue[self.i])
+
+    @queue.setter
+    def queue(self, value: float) -> None:
+        self.pool.queue[self.i] = float(value)
+
+    @property
+    def current(self) -> Dict[str, float]:
+        return self.pool.param_dict(self.i)
+
+    @property
+    def target(self) -> Dict[str, float]:
+        p = self.pool
+        return {name: float(p.target[self.i, j])
+                for j, name in enumerate(p.param_names[self.i])
+                if p.present[self.i, j]}
 
     # -- simulation ----------------------------------------------------------
     def tick(self, t: float, dt: float = 1.0) -> None:
-        # settle resource params toward their targets
-        for name, tgt in self.target.items():
-            p = self.profile.api.parameter(name)
-            if p.is_resource:
-                cur = self.current[name]
-                alpha = 1.0 - math.exp(-dt / self.settle_tau)
-                self.current[name] = cur + (tgt - cur) * alpha
-
-        capacity = self.profile.tp_max(self.current)
-        capacity *= max(float(self.rng.normal(1.0, self.noise)), 0.0)
-        arrivals = self.rps * dt
-        work = self.queue + arrivals
-        processed = min(work, capacity * dt)
-        self.queue = min(work - processed,
-                         self.rps * self.buffer_s)       # bounded buffer
-        throughput = processed / dt
-        completion = min(throughput / self.rps, 1.0) if self.rps > 0 else 1.0
-        saturation = min(self.rps / max(capacity, 1e-9), 1.0)
-        res = self.profile.api.resource_names
-        alloc = self.current[res[0]] if res else 1.0
-        # when saturated the container burns parallel_eff of its allocation;
-        # when idle, usage tracks offered load
-        utilization = self.profile.parallel_eff * saturation \
-            + 0.02 * float(self.rng.normal(1.0, 1.0))
-        self._last = {
-            "rps": self.rps,
-            "throughput": throughput,
-            "tp_max": capacity,          # from per-item latency, §V-B(a)
-            "completion": completion,
-            "queue": self.queue,
-            "cpu_utilization": min(max(utilization, 0.0), 1.0),
-            **{k: v for k, v in self.current.items()},
-        }
+        self.pool.tick(t, dt, idx=[self.i])
 
 
 @dataclasses.dataclass
@@ -142,6 +315,7 @@ class EdgeEnvironment:
             hostnames = [f"edge-{i}" for i in range(hosts)]
             self.platform = Fleet([MUDAP(capacity, host=h)
                                    for h in hostnames])
+        self.pool = ContainerPool()
         self.services: Dict[str, SimulatedService] = {}
         self.patterns: Dict[str, Pattern] = {}
         rng = np.random.default_rng(seed)
@@ -159,7 +333,8 @@ class EdgeEnvironment:
                 sid = ServiceId(hostname, profile.type, f"c{r}")
                 key = str(sid)
                 backend = SimulatedService(
-                    profile, np.random.default_rng(rng.integers(2 ** 31)))
+                    profile, np.random.default_rng(rng.integers(2 ** 31)),
+                    pool=self.pool)
                 defaults = dict(profile.defaults)
                 for res, cap in capacity.items():
                     if res in profile.api.names:
@@ -177,7 +352,8 @@ class EdgeEnvironment:
         self.t = 0.0
 
     # -- measured Eq. (8) ------------------------------------------------------
-    def measured_fulfillment(self, window: float = 5.0) -> (float, Dict[str, float]):
+    def measured_fulfillment(self, window: float = 5.0
+                             ) -> Tuple[float, Dict[str, float]]:
         per_service = {}
         metrics_list, slo_list = [], []
         states = self.platform.window_states(since=self.t - window,
@@ -213,11 +389,14 @@ class EdgeEnvironment:
             on_cycle: Optional[Callable] = None) -> List[CycleRecord]:
         history: List[CycleRecord] = []
         steps = int(duration_s)
+        # (pool index, pattern) per container — indexing by the backend's own
+        # pool slot, not dict position, so extra pool tenants cannot skew it
+        routes = [(b.i, self.patterns[k]) for k, b in self.services.items()]
         for step in range(1, steps + 1):
             self.t += 1.0
-            for key, backend in self.services.items():
-                backend.rps = self.patterns[key](self.t)
-                backend.tick(self.t)
+            for j, pat in routes:                # workloads are opaque callables
+                self.pool.rps[j] = pat(self.t)
+            self.pool.tick(self.t)               # whole fleet, one batched step
             self.platform.scrape(self.t)
             if step % int(cycle_s) == 0:
                 result = self._drive(agent)

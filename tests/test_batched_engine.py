@@ -1,0 +1,250 @@
+"""Fused batched cycle engine: fit/objective parity, padding invariants and
+the no-recompile guarantee (ISSUE 2 acceptance gates).
+
+Deliberately hypothesis-free (seed-parametrized instead): these are tier-1
+acceptance tests and must run even where the optional property-test dep is
+absent."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.regression import (BatchedFitPlan, TRACE_COUNTS, fit_batched,
+                                   fit_polynomial, pad_capacity, stack_models)
+from repro.core.slo import SLO
+from repro.core.solver import ServiceSpec, SolverProblem
+
+
+def _random_relations(rng, n_rel):
+    rels, refs = [], []
+    for _ in range(n_rel):
+        f = int(rng.integers(1, 4))
+        d = int(rng.integers(1, 4))
+        n = int(rng.integers(5, 60))
+        X = rng.uniform(0.1, 8.0, (n, f)).astype(np.float32)
+        coef = rng.uniform(-2, 2, f)
+        Y = ((X * coef).sum(axis=1) ** 2
+             + rng.normal(0, 0.1, n)).astype(np.float32)
+        scale = np.maximum(np.abs(X).max(axis=0), 1e-9)
+        rels.append(dict(X=X, Y=Y, degree=d, x_scale=scale, target="tp_max"))
+        refs.append(fit_polynomial(X, Y, d, x_scale=scale, target="tp_max"))
+    return rels, refs
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_fit_batched_matches_fit_polynomial(seed):
+    """Acceptance: batched fit == per-relation fit within 1e-4 rel tol.
+
+    Parity is on *predictions* (the quantity the solver consumes): the
+    normal equations are often ill-conditioned, so raw weights may differ
+    while the fitted surfaces agree."""
+    rng = np.random.default_rng(seed * 7919)
+    rels, refs = _random_relations(rng, int(rng.integers(1, 6)))
+    sm = fit_batched(rels)
+    for i, (rel, ref) in enumerate(zip(rels, refs)):
+        X = rel["X"]
+        got = np.asarray(sm.model(i).predict(X))
+        want = np.asarray(ref.predict(X))
+        span = max(float(np.abs(want).max()), 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * span)
+
+
+def test_stack_models_roundtrip(rng):
+    rels, refs = _random_relations(rng, 4)
+    sm = stack_models(refs, [f"s{i}" for i in range(4)])
+    x = np.zeros((4, sm.x_scale.shape[1]), np.float32)
+    for i, rel in enumerate(rels):
+        x[i, :rel["X"].shape[1]] = rel["X"][0]
+    got = np.asarray(sm.predict_all(x))
+    want = np.asarray([float(r.predict(rels[i]["X"][0]))
+                       for i, r in enumerate(refs)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_fit_plan_reuse_matches_one_shot(rng):
+    rels, _ = _random_relations(rng, 3)
+    cap = pad_capacity(max(len(r["Y"]) for r in rels))
+    plan = BatchedFitPlan(
+        [dict(n_features=r["X"].shape[1], degree=r["degree"],
+              x_scale=r["x_scale"]) for r in rels], row_capacity=cap)
+    sm_plan = plan.fit([(r["X"], r["Y"]) for r in rels])
+    sm_once = fit_batched(rels, row_capacity=cap)
+    np.testing.assert_allclose(np.asarray(sm_plan.w), np.asarray(sm_once.w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _random_problem(rng, n_services):
+    specs = []
+    for i in range(n_services):
+        slos = [SLO("completion", 1.0, 1.0)]
+        if rng.random() < 0.7:
+            slos.append(SLO("quality", float(rng.uniform(400, 900)), 0.5))
+        if rng.random() < 0.4:
+            slos.append(SLO("tp_max", float(rng.uniform(50, 150)), 0.3))
+        specs.append(ServiceSpec(
+            name=f"s{i}", param_names=("cores", "quality"),
+            lower=(0.1, 100.0), upper=(8.0, 1000.0),
+            resource_mask=(True, False), slos=tuple(slos),
+            relation_features=(("tp_max", (0, 1)),)))
+    return SolverProblem(specs)
+
+
+@pytest.mark.parametrize("seed,n_services",
+                         [(s, 1 + s % 5) for s in range(8)])
+def test_fused_objective_matches_loop(seed, n_services):
+    """Acceptance: fused objective == seed loop objective within 1e-4."""
+    rng = np.random.default_rng(seed * 104729)
+    problem = _random_problem(rng, n_services)
+    models = {}
+    for s in problem.specs:
+        X = np.c_[rng.uniform(0.1, 8, 80), rng.uniform(100, 1000, 80)]
+        Y = rng.uniform(10, 30) * X[:, 0] - X[:, 1] / rng.uniform(50, 200)
+        models[s.name] = {"tp_max": fit_polynomial(
+            X.astype(np.float32), Y.astype(np.float32), 2,
+            x_scale=[8.0, 1000.0], target="tp_max")}
+    rps = rng.uniform(1.0, 100.0, n_services).astype(np.float32)
+    for _ in range(3):
+        a = problem.random_assignment(rng, 8.0 * n_services)
+        loop = float(problem.objective_loop(jnp.asarray(a), models,
+                                            jnp.asarray(rps)))
+        fused = float(problem.objective(jnp.asarray(a), models,
+                                        jnp.asarray(rps)))
+        assert abs(fused - loop) <= 1e-4 * max(abs(loop), 1.0), (loop, fused)
+
+
+def test_per_service_fulfillment_sums_to_objective(rng):
+    problem = _random_problem(rng, 3)
+    models = {}
+    for s in problem.specs:
+        X = np.c_[rng.uniform(0.1, 8, 50), rng.uniform(100, 1000, 50)]
+        Y = 20 * X[:, 0] - X[:, 1] / 100.0
+        models[s.name] = {"tp_max": fit_polynomial(
+            X.astype(np.float32), Y.astype(np.float32), 2,
+            x_scale=[8.0, 1000.0])}
+    rps = jnp.asarray([50.0, 20.0, 70.0])
+    a = jnp.asarray(problem.random_assignment(rng, 24.0))
+    seg = np.asarray(problem.per_service_fulfillment(a, models, rps))
+    assert seg.shape == (3,)
+    total = float(problem.objective(a, models, rps))
+    assert abs(float(seg.sum()) - total) < 1e-5
+
+
+def test_unknown_slo_metric_raises_at_construction():
+    with pytest.raises(KeyError):
+        SolverProblem([ServiceSpec(
+            name="s0", param_names=("cores",), lower=(0.1,), upper=(8.0,),
+            resource_mask=(True,), slos=(SLO("latency", 1.0, 1.0),),
+            relation_features=(("tp_max", (0,)),))])
+
+
+def test_pad_capacity_buckets():
+    assert pad_capacity(1) == 64
+    assert pad_capacity(64) == 64
+    assert pad_capacity(65) == 128
+    assert pad_capacity(1000) == 1024
+
+
+def test_no_recompile_across_growing_table(rng):
+    """Acceptance: zero recompiles after the first cycle at fixed padding —
+    growing the training table (and refitting/resolving every cycle) must
+    not retrace the batched fit or the fused objective."""
+    problem = _random_problem(np.random.default_rng(0), 3)
+    X = rng.uniform(0.1, 8.0, (40, 2)).astype(np.float32)
+    X[:, 1] *= 100.0
+    Y = (20 * X[:, 0] - X[:, 1] / 100.0).astype(np.float32)
+    cap = 64
+    plan = BatchedFitPlan(
+        [dict(n_features=2, degree=2, x_scale=[8.0, 1000.0])
+         for _ in range(3)], row_capacity=cap)
+
+    def cycle(n_rows):
+        sm = plan.fit([(X[:n_rows], Y[:n_rows])] * 3)
+        # evaluate through the solver's jitted entry point, as a cycle would
+        stacked = problem.stack({
+            s.name: {"tp_max": sm.model(i)}
+            for i, s in enumerate(problem.specs)})
+        a = problem.random_assignment(rng, 24.0)
+        problem._slsqp_vg1(jnp.asarray(a), stacked,
+                           jnp.asarray(np.ones(3, np.float32)),
+                           jnp.float32(24.0))
+
+    cycle(4)   # warm-up: compiles fit + objective once
+    before = dict(TRACE_COUNTS)
+    for n in range(5, 10):   # D grows by one row per cycle, same padding
+        cycle(n)
+    grew = {k: TRACE_COUNTS[k] - before.get(k, 0) for k in TRACE_COUNTS
+            if TRACE_COUNTS[k] - before.get(k, 0) > 0}
+    assert not grew, f"unexpected retraces: {grew}"
+
+
+def test_rask_cycle_no_recompile():
+    """End-to-end: a RASK agent refitting+resolving across cycles with a
+    growing table keeps the jit trace counts flat after its first solve."""
+    from repro.core import RASKAgent, RaskConfig
+    from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          seed=0)
+    agent = RASKAgent(env.platform, paper_knowledge(), RaskConfig(xi=4),
+                      seed=0)
+    env.run(agent, duration_s=70)          # 4 explore + 3 solve cycles
+    before = dict(TRACE_COUNTS)
+    env.run(agent, duration_s=60)          # 6 more cycles, D grows each one
+    grew = {k: TRACE_COUNTS[k] - before.get(k, 0) for k in TRACE_COUNTS
+            if TRACE_COUNTS[k] - before.get(k, 0) > 0}
+    assert not grew, f"unexpected retraces: {grew}"
+
+
+# -- columnar ring buffer properties ----------------------------------------
+
+@pytest.mark.parametrize("seed,n_samples,retention",
+                         [(s, 1 + (s * 13) % 40, 2 + (s * 7) % 24)
+                          for s in range(15)])
+def test_ring_window_matches_bruteforce(seed, n_samples, retention):
+    from repro.core.telemetry import TimeSeriesDB
+
+    rng = np.random.default_rng(seed * 31337)
+    db = TimeSeriesDB(retention=retention)
+    samples = []
+    t = 0.0
+    for _ in range(n_samples):
+        t += float(rng.uniform(0.1, 2.0))
+        m = {"a": float(rng.normal()), "b": float(rng.normal())}
+        db.scrape("svc", t, m)
+        samples.append((t, m))
+    kept = samples[-retention:]            # retention drops the oldest
+    since = float(rng.uniform(0.0, t))
+    until = float(rng.uniform(since, t + 1.0))
+    window = [(ts, m) for ts, m in kept if since <= ts <= until]
+    got = db.window_mean("svc", since, until)
+    if not window:
+        assert got == {}
+    else:
+        for k in ("a", "b"):
+            want = float(np.mean([m[k] for _, m in window]))
+            assert got[k] == pytest.approx(want, rel=1e-9)
+    assert db.latest("svc").t == pytest.approx(kept[-1][0])
+    assert len(db.window("svc", 0.0, None)) == len(kept)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_training_table_matches_dict_reference(seed):
+    from repro.core.telemetry import TrainingTable
+
+    rng = np.random.default_rng(seed * 65537)
+    tab = TrainingTable(initial=4)
+    ref = []
+    keys = ("cores", "quality", "tp_max")
+    for _ in range(int(rng.integers(1, 40))):
+        row = {k: float(rng.normal()) for k in keys
+               if rng.random() < 0.8}
+        tab.append("s", row)
+        ref.append(row)
+    X, Y = tab.design_matrix("s", ("cores", "quality"), "tp_max")
+    want = [r for r in ref if all(k in r for k in keys)]
+    assert X.shape == (len(want), 2)
+    for i, r in enumerate(want):
+        assert X[i, 0] == pytest.approx(r["cores"])
+        assert Y[i] == pytest.approx(r["tp_max"])
+    assert tab.rows("s") == [
+        {k: pytest.approx(v) for k, v in r.items()} for r in ref]
