@@ -10,10 +10,17 @@ instruments every stage of the fused batched cycle engine at |S| in
 * ``tick``      — one vectorized ``ContainerPool.tick`` of the whole fleet;
 * ``fit``       — the batched stacked ridge fit vs the seed's per-relation
   ``fit_polynomial`` loop;
-* ``solve``     — SLSQP on the fused gather+segment_sum objective vs the
-  seed's per-service loop objective;
-* ``decide``    — the full RASK fit+solve decision, fused vs loop
-  (``RaskConfig(fused=False)``), i.e. the per-cycle agent latency E4-E6 plot.
+* ``solve``     — the backend comparison on identical warm-started problems:
+  the default single-dispatch PGD (``solve_us``), PGD scoring through the
+  Pallas objective kernel in interpret mode (``solve_pallas_us``), the
+  host-looped scipy SLSQP reference (``solve_slsqp_us``, the pre-PR-3
+  default: one dispatch + one device sync per line-search iteration), and
+  the seed's loop objective (``solve_loop_us``);
+* ``solve_many``— a 3-host Fleet decided in ONE vmapped dispatch with
+  per-host capacities vs the same subproblems solved sequentially;
+* ``decide``    — the full RASK decision as a single fused dispatch
+  (fit+solve+project+noise on device) vs the pre-PR-3 SLSQP default
+  (``decide_slsqp_us``) and the seed loop path (``decide_loop_us``).
 
 All timings are steady-state (post jit warm-up) medians.  The artifact also
 records jit trace counts over the timed window — zero recompiles after the
@@ -24,12 +31,13 @@ import time
 import numpy as np
 
 from repro.core.regression import TRACE_COUNTS
+from repro.core.solver import SolverProblem
 
 from . import common
 
 S_LIST = (3, 9, 27)
 REPS = 20            # reps for cheap stages (telemetry / tick / fit)
-SOLVE_REPS = 5       # reps for solve / decide (SLSQP-bound)
+SOLVE_REPS = 5       # reps for solve / decide (solver-bound)
 TRAIN_CYCLES = 30    # exploration cycles populating the training table
 # quick/CI runs save under a different name so the committed full-sweep
 # acceptance artifact is never clobbered by |S|=3 smoke data
@@ -47,27 +55,62 @@ def _bench(fn, reps: int, warmup: int = 2) -> float:
     return float(np.median(times) * 1e6)     # us per call
 
 
-def _trained_agent(replicas: int, fused: bool, seed: int = 0):
+def _trained_agent(replicas: int, seed: int = 0, hosts: int = 1, **cfg_kw):
     """Environment + RASK agent with a populated training table, one solve
     cycle already done (jit warm)."""
     env = common.make_env(seed=seed, replicas=replicas,
-                          capacity=8.0 * replicas)
+                          capacity=8.0 * (replicas if hosts == 1 else 1),
+                          hosts=hosts)
     agent = common.make_rask(env, seed=seed, xi=TRAIN_CYCLES, eta=0.0,
-                             fused=fused)
+                             **cfg_kw)
     # TRAIN_CYCLES exploration cycles + 2 solve cycles (compile + steady)
     env.run(agent, duration_s=(TRAIN_CYCLES + 2) * common.CYCLE_S)
     return env, agent
 
 
-def run(s_list=None, reps=None, solve_reps=None):
+def _fleet_sequential(agent):
+    """The Python-loop counterpart of ``FleetSolverProblem.solve_many``:
+    per-host ``SolverProblem``s solved one after another (models pre-stacked
+    outside the timed region — the loop pays only its solves)."""
+    fp = agent.fleet_problem
+    problem = agent.problem
+    models = agent.problem.models_dict(agent.stacked)
+    subs = []
+    for b, host in enumerate(fp.hosts):
+        idx = [i for i, s in enumerate(problem.specs)
+               if agent.platform.host_of(s.name).host == host]
+        sub = SolverProblem([problem.specs[i] for i in idx])
+        sub_sm = sub.stack({problem.specs[i].name:
+                            models[problem.specs[i].name] for i in idx})
+        take = np.concatenate(
+            [np.arange(problem.offsets[i],
+                       problem.offsets[i] + problem.specs[i].n_params)
+             for i in idx])
+        subs.append((sub, sub_sm, np.asarray(idx), take,
+                     float(fp.capacities[b])))
+    return subs
+
+
+STAGES = ("telemetry", "tick", "fit", "solve", "solve_many", "decide",
+          "baselines")
+
+
+def run(s_list=None, reps=None, solve_reps=None, stages=None):
+    """``stages``: subset of STAGES to measure (None = all).  The --check
+    gate passes ("decide",) so CI only trains the default agent and skips
+    the slow slsqp/seed-loop/fleet baselines it would discard anyway."""
     s_list = s_list if s_list is not None else S_LIST
     reps = reps if reps is not None else REPS
     solve_reps = solve_reps if solve_reps is not None else SOLVE_REPS
+    has = (lambda s: True) if stages is None else (lambda s: s in stages)
     results = {}
     for s_count in s_list:
         replicas = max(s_count // 3, 1)
-        env, agent = _trained_agent(replicas, fused=True)
-        env_l, agent_l = _trained_agent(replicas, fused=False)
+        env, agent = _trained_agent(replicas)                    # default: pgd
+        if has("baselines"):
+            env_s, agent_s = _trained_agent(replicas, backend="slsqp")
+            env_l, agent_l = _trained_agent(replicas, fused=False,
+                                            backend="slsqp")    # seed loop
         row = {}
 
         # telemetry: bulk scrape + bulk windowed aggregation
@@ -77,43 +120,84 @@ def run(s_list=None, reps=None, solve_reps=None):
             t_holder[0] += 1.0
             env.platform.scrape(t_holder[0])
 
-        row["telemetry_scrape_us"] = _bench(scrape, reps)
-        row["telemetry_window_us"] = _bench(
-            lambda: env.platform.window_states(since=t_holder[0] - 5.0,
-                                               until=t_holder[0]), reps)
+        if has("telemetry"):
+            row["telemetry_scrape_us"] = _bench(scrape, reps)
+            row["telemetry_window_us"] = _bench(
+                lambda: env.platform.window_states(since=t_holder[0] - 5.0,
+                                                   until=t_holder[0]), reps)
 
         # tick: one vectorized step of every container
-        row["tick_us"] = _bench(lambda: env.pool.tick(t_holder[0]), reps)
+        if has("tick"):
+            row["tick_us"] = _bench(lambda: env.pool.tick(t_holder[0]), reps)
 
         # fit: batched vs per-relation loop (same table sizes)
-        row["fit_us"] = _bench(agent._fit_models, reps)
-        row["fit_loop_us"] = _bench(agent_l._fit_models, reps)
+        if has("fit"):
+            row["fit_us"] = _bench(agent._fit_models, reps)
+        if has("fit") and has("baselines"):
+            row["fit_loop_us"] = _bench(agent_l._fit_models, reps)
+            row["fit_speedup"] = row["fit_loop_us"] / row["fit_us"]
 
-        # solve: fused vs loop objective, warm start from the cached optimum
+        # solve: all backends on the same warm-started problem
         rps = np.asarray([env.services[k].rps for k in agent.services],
                          np.float32)
         x0 = agent._cached_x
-        x0_l = agent_l._cached_x
-        row["solve_us"] = _bench(
-            lambda: agent.problem.solve_slsqp(agent.stacked, rps, x0,
-                                              agent.capacity), solve_reps)
-        row["solve_loop_us"] = _bench(
-            lambda: agent_l.problem.solve_slsqp(agent_l.models, rps, x0_l,
-                                                agent_l.capacity), solve_reps)
+        cap = agent.capacity
+        if has("solve"):
+            row["solve_us"] = _bench(
+                lambda: agent.problem.solve_pgd(agent.stacked, rps, x0, cap),
+                solve_reps)
+            row["solve_pallas_us"] = _bench(
+                lambda: agent.problem.solve_pgd(
+                    agent.stacked, rps, x0, cap,
+                    objective_impl="pallas_interpret"), solve_reps)
+            row["solve_slsqp_us"] = _bench(
+                lambda: agent.problem.solve_slsqp(agent.stacked, rps, x0,
+                                                  cap), solve_reps)
+        if has("solve") and has("baselines"):
+            x0_l = agent_l._cached_x
+            row["solve_loop_us"] = _bench(
+                lambda: agent_l.problem.solve_slsqp(agent_l.models, rps,
+                                                    x0_l, cap), solve_reps)
+            row["solve_speedup"] = row["solve_loop_us"] / row["solve_us"]
+
+        # solve_many: a 3-host fleet in one vmapped dispatch vs a loop
+        if has("solve_many"):
+            env_f, agent_f = _trained_agent(replicas, hosts=3)
+            fp = agent_f.fleet_problem
+            rps_f = np.asarray(
+                [env_f.services[k].rps for k in agent_f.services], np.float32)
+            x0_f = agent_f._cached_x
+            sm_f = agent_f.stacked
+            row["solve_many_us"] = _bench(
+                lambda: fp.solve_many(sm_f, rps_f, x0_f), solve_reps)
+            subs = _fleet_sequential(agent_f)
+
+            def seq():
+                for sub, sub_sm, idx, take, sub_cap in subs:
+                    sub.solve_pgd(sub_sm, rps_f[idx], x0_f[take], sub_cap)
+
+            row["solve_seq_us"] = _bench(seq, solve_reps)
+            row["solve_many_speedup"] = (row["solve_seq_us"]
+                                         / row["solve_many_us"])
 
         # decide: the full per-cycle agent latency, with recompile accounting
-        obs = agent.observe(env.t)
-        obs_l = agent_l.observe(env_l.t)
-        traces0 = dict(TRACE_COUNTS)
-        row["decide_us"] = _bench(lambda: agent.decide(obs), solve_reps)
-        row["recompiles_during_decide"] = {
-            k: TRACE_COUNTS[k] - traces0.get(k, 0) for k in TRACE_COUNTS
-            if TRACE_COUNTS[k] - traces0.get(k, 0)}
-        row["decide_loop_us"] = _bench(lambda: agent_l.decide(obs_l),
-                                       solve_reps)
-        row["decide_speedup"] = row["decide_loop_us"] / row["decide_us"]
-        row["fit_speedup"] = row["fit_loop_us"] / row["fit_us"]
-        row["solve_speedup"] = row["solve_loop_us"] / row["solve_us"]
+        if has("decide"):
+            obs = agent.observe(env.t)
+            traces0 = dict(TRACE_COUNTS)
+            row["decide_us"] = _bench(lambda: agent.decide(obs), solve_reps)
+            row["recompiles_during_decide"] = {
+                k: TRACE_COUNTS[k] - traces0.get(k, 0) for k in TRACE_COUNTS
+                if TRACE_COUNTS[k] - traces0.get(k, 0)}
+        if has("decide") and has("baselines"):
+            obs_s = agent_s.observe(env_s.t)
+            obs_l = agent_l.observe(env_l.t)
+            row["decide_slsqp_us"] = _bench(lambda: agent_s.decide(obs_s),
+                                            solve_reps)
+            row["decide_loop_us"] = _bench(lambda: agent_l.decide(obs_l),
+                                           solve_reps)
+            row["decide_speedup"] = row["decide_loop_us"] / row["decide_us"]
+            row["decide_speedup_vs_slsqp"] = (row["decide_slsqp_us"]
+                                              / row["decide_us"])
         results[f"S={s_count}"] = row
     common.save(ARTIFACT, results)
     return results
@@ -127,6 +211,17 @@ def report(results) -> None:
             print(f"e7[{stage},{key}],{row[stage + '_us']:.0f},"
                   f"speedup={row[stage + '_speedup']:.2f}x"
                   f" loop={row[stage + '_loop_us']:.0f}us")
+        print(f"e7[solve-backends,{key}],{row['solve_us']:.0f},"
+              f"pallas={row.get('solve_pallas_us', 0):.0f}us"
+              f" slsqp={row.get('solve_slsqp_us', 0):.0f}us")
+        if "solve_many_us" in row:
+            print(f"e7[solve-many,{key}],{row['solve_many_us']:.0f},"
+                  f"seq={row['solve_seq_us']:.0f}us"
+                  f" speedup={row['solve_many_speedup']:.2f}x")
+        if "decide_slsqp_us" in row:
+            print(f"e7[decide-vs-slsqp,{key}],{row['decide_us']:.0f},"
+                  f"slsqp={row['decide_slsqp_us']:.0f}us"
+                  f" speedup={row['decide_speedup_vs_slsqp']:.2f}x")
         rec = row.get("recompiles_during_decide") or {}
         print(f"e7[recompiles,{key}],0,{sum(rec.values())}")
 

@@ -75,7 +75,47 @@ def lm_calibration(data):
     return cal
 
 
+def rask_objective_rows(s_list=(3, 9, 27), k_starts=8):
+    """Three-term roofline for the RASK batched-objective kernel
+    (kernels/rask_objective.py) at the e7 problem shapes.
+
+    Paper layout per 3 services: 7 decision params, 3 relations (F_max = 3,
+    degree 2 -> T = 10 terms), 7 SLOs.  Counts assume the kernel's one-hot
+    matmul formulation: feature gather, parameter/relation picks and the
+    per-service segment-sum are all dense matmuls; term products come from
+    statically-unrolled powers.  The kernel is microscopically small for a
+    TPU — both floors land in the tens of nanoseconds, i.e. the op is
+    dispatch-bound, which is exactly why the solver batches K starts (and a
+    Fleet batches hosts) into ONE launch rather than looping.
+    """
+    out = []
+    for s in s_list:
+        units = s // 3
+        D, R, Q, T, F, deg = 7 * units, 3 * units, 7 * units, 10, 3, 2
+        flops = k_starts * (2 * R * F * D            # one-hot gather matmul
+                            + R * T * F * (deg + 2)  # power select + product
+                            + 2 * R * T              # weighted term sum
+                            + 2 * Q * (D + R + 4)    # picks + phi
+                            + 2 * Q * s)             # segment-sum matmul
+        floats = (k_starts * D + R * F * D + Q * D + Q * R + Q * s
+                  + R * T * F + 2 * R * T + R * F + 4 * Q + s
+                  + k_starts * s)
+        bytes_ = 4 * floats
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_ / HBM_BW
+        out.append(dict(S=s, K=k_starts, flops=flops, bytes=bytes_,
+                        compute_s=compute_s, memory_s=memory_s,
+                        bound="memory" if memory_s > compute_s else "compute",
+                        intensity=flops / bytes_))
+    return out
+
+
 def main():
+    for r in rask_objective_rows():
+        dom = max(r["compute_s"], r["memory_s"])
+        print(f"roofline[rask_objective,S={r['S']},K={r['K']}],"
+              f"{dom * 1e6:.3f},{r['bound']}-bound"
+              f" intensity={r['intensity']:.2f}flop/B")
     data = rows()
     if not data:
         print("roofline,0,no-dryrun-artifacts")

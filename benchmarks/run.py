@@ -82,6 +82,36 @@ def _report_from_artifacts(name, common) -> bool:
     return False
 
 
+def check_e7() -> int:
+    """Regression gate: a quick |S|=9 hot-path run vs the committed
+    artifact — fail on a >1.5x ``decide_us`` regression (the gate headroom
+    absorbs CI machine variance; a retired fast path blows straight
+    through it) or on ANY jit recompile during steady-state decides."""
+    from . import common, e7_hot_path
+
+    committed = common.load("e7_hot_path")
+    if not committed or "S=9" not in committed:
+        print("e7-check,1,missing-committed-artifact")
+        return 1
+    e7_hot_path.S_LIST = (9,)
+    e7_hot_path.REPS = 5
+    e7_hot_path.SOLVE_REPS = 3
+    e7_hot_path.TRAIN_CYCLES = 12
+    e7_hot_path.ARTIFACT = "e7_hot_path_check"
+    # only the gated measurements: skip the slow slsqp/seed-loop/fleet
+    # baselines whose numbers the gate would discard
+    row = e7_hot_path.run(stages=("decide",))["S=9"]
+    ref = committed["S=9"]
+    limit = 1.5 * ref["decide_us"]
+    recompiles = sum((row.get("recompiles_during_decide") or {}).values())
+    ok = row["decide_us"] <= limit and recompiles == 0
+    print(f"e7-check[decide],{row['decide_us']:.0f},"
+          f"limit={limit:.0f}us committed={ref['decide_us']:.0f}us")
+    print(f"e7-check[recompiles],0,{recompiles}")
+    print(f"e7-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -89,7 +119,16 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--force", action="store_true",
                     help="recompute even when an artifact exists")
+    ap.add_argument("--check", default=None, metavar="SUITE",
+                    help="regression gate: compare a quick run against the "
+                         "committed artifact (supported: e7); exits nonzero "
+                         "on regression")
     args = ap.parse_args()
+
+    if args.check:
+        if args.check != "e7":
+            ap.error(f"--check supports only 'e7', got {args.check!r}")
+        sys.exit(check_e7())
 
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,

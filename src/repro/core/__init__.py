@@ -13,7 +13,7 @@ from .regression import (BatchedFitPlan, PolynomialModel, StackedModels,
                          polynomial_exponents, select_degree, stack_models)
 from .slo import SLO, completion, fulfillment, global_fulfillment, \
     service_fulfillment, violation_rate
-from .solver import ServiceSpec, SolverProblem
+from .solver import FleetSolverProblem, ServiceSpec, SolverProblem
 
 __all__ = [
     "Agent", "APPLIED", "CLIPPED", "REJECTED", "CycleResult", "DecisionInfo",
@@ -25,5 +25,5 @@ __all__ = [
     "fit_polynomial", "mse", "polynomial_exponents", "select_degree",
     "stack_models", "SLO", "completion", "fulfillment",
     "global_fulfillment", "service_fulfillment", "violation_rate",
-    "ServiceSpec", "SolverProblem",
+    "FleetSolverProblem", "ServiceSpec", "SolverProblem",
 ]

@@ -185,8 +185,12 @@ class DecisionInfo:
     """Side-channel metadata of one ``decide()`` call (for CycleRecords)."""
 
     explored: bool = False
-    runtime_s: float = 0.0                # fit + solve duration
+    runtime_s: float = 0.0                # steady-state fit + solve duration
     score: float = float("nan")           # solver objective, if any
+    # jit compile time, nonzero only on the first compiled solve of an agent
+    # — kept out of runtime_s so E4-E6 runtime plots are not skewed by a
+    # one-off compilation spike on the first post-exploration cycle
+    compile_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -197,9 +201,10 @@ class CycleResult:
     rounds: int
     explored: bool
     assignments: Dict[str, Dict[str, float]]
-    runtime_s: float                      # fit + solve duration (E4/E5/E6)
+    runtime_s: float                      # steady-state fit + solve (E4/E5/E6)
     solver_score: float = float("nan")
     receipt: Optional[PlanReceipt] = None
+    compile_s: float = 0.0                # first-solve jit compile time
 
 
 @runtime_checkable
@@ -249,4 +254,5 @@ class PlanningAgent:
         receipt = self.platform.apply_plan(plan)
         info = self.last_decision
         return CycleResult(self.rounds, info.explored, receipt.applied(),
-                           info.runtime_s, info.score, receipt=receipt)
+                           info.runtime_s, info.score, receipt=receipt,
+                           compile_s=info.compile_s)

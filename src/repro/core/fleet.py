@@ -10,11 +10,19 @@ with its *own* capacity C and water-filling arbitration) and adds:
   placement, applies each host's sub-plan transactionally, and merges the
   per-host ``PlanReceipt``s, so an agent proposes one plan for 9+ services
   across 3 devices exactly like it does for 3 services on one;
-* **aggregate views** — ``capacity`` (summed budgets, the relaxation the
-  RASK solver optimizes against; per-host limits stay enforced at apply
-  time, with clips reported in the receipt), bulk ``window_states``, and
-  the same registry/telemetry surface as a single MUDAP, so every agent
-  runs unmodified on a fleet.
+* **aggregate views** — ``capacity`` (summed budgets), bulk
+  ``window_states``, and the same registry/telemetry surface as a single
+  MUDAP, so every agent runs unmodified on a fleet.
+
+RASK's default backend no longer optimizes against the summed-capacity
+relaxation: on a Fleet it builds a ``FleetSolverProblem`` (core/solver.py)
+from the ``hosts()``/``host_of`` topology and solves every host's services
+against that host's OWN budget in one vmapped dispatch, so its plans are
+per-host feasible by construction.  Apply-time water-filling stays as the
+safety net for everything that does not solve per host — action noise, the
+DQN/VPA baselines, hand-built plans, and RASK's paper-faithful
+``backend="slsqp"`` / seed-loop (``fused=False``) reference paths, which
+still optimize the aggregate — with clips reported in the receipt.
 """
 from __future__ import annotations
 
@@ -50,7 +58,8 @@ class Fleet:
 
     @property
     def capacity(self) -> Dict[str, float]:
-        """Fleet-aggregate resource budget (the solver's relaxed constraint)."""
+        """Fleet-aggregate resource budget (reporting/placement view; the
+        RASK solver uses the per-host budgets via ``FleetSolverProblem``)."""
         total: Dict[str, float] = {}
         for h in self._hosts.values():
             for r, c in h.capacity.items():

@@ -243,9 +243,10 @@ class StackedModels:
         return cls(*leaves, max_degree=aux[0], labels=aux[1])
 
 
-@partial(jax.jit, static_argnames=("max_degree",))
-def _fit_batched(Xp, Yp, row_mask, exponents, term_mask, n_terms, x_scale,
-                 ridge, max_degree: int):
+def fit_batched_arrays(Xp, Yp, row_mask, exponents, term_mask, n_terms,
+                       x_scale, ridge, max_degree: int):
+    """Unjitted vmapped ridge core — composable into larger jitted pipelines
+    (the fused decide dispatches fit+solve as ONE program through this)."""
     TRACE_COUNTS["fit_batched"] += 1      # executed at trace time only
 
     def one(X, Y, rm, e, tm, nt, xs):
@@ -260,6 +261,9 @@ def _fit_batched(Xp, Yp, row_mask, exponents, term_mask, n_terms, x_scale,
 
     return jax.vmap(one)(Xp, Yp, row_mask, exponents, term_mask,
                          n_terms.astype(jnp.float32), x_scale)
+
+
+_fit_batched = jax.jit(fit_batched_arrays, static_argnames=("max_degree",))
 
 
 def pad_capacity(n: int, minimum: int = 64) -> int:
@@ -314,15 +318,26 @@ class BatchedFitPlan:
         self._tmask = jnp.asarray(tmask)
         self._nterms = jnp.asarray(nterms)
         self._scale = jnp.asarray(scale)
-        # reusable host-side padded buffers (overwritten every fit)
-        self._Xp = np.zeros((r_count, row_capacity, self.f_max), np.float32)
-        self._Yp = np.zeros((r_count, row_capacity), np.float32)
-        self._rmask = np.zeros((r_count, row_capacity), np.float32)
+        # reusable host-side padded buffers: views into ONE contiguous f32
+        # block, so the fused decide uploads a single array per cycle (three
+        # separate device_puts measurably dominate the host overhead at
+        # edge problem sizes)
+        self.n_relations = r_count
+        self._buf = np.zeros(r_count * row_capacity * (self.f_max + 2),
+                             np.float32)
+        nx = r_count * row_capacity * self.f_max
+        ny = r_count * row_capacity
+        self._Xp = self._buf[:nx].reshape(r_count, row_capacity, self.f_max)
+        self._Yp = self._buf[nx:nx + ny].reshape(r_count, row_capacity)
+        self._rmask = self._buf[nx + ny:].reshape(r_count, row_capacity)
 
-    def fit(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
-            ) -> StackedModels:
-        """data: one (X (N_r, F_r), Y (N_r,)) pair per relation, in plan
-        order; the newest ``row_capacity`` rows win if N_r exceeds it."""
+    def fill(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Overwrite the reusable padded host buffers with ``data`` (one
+        (X (N_r, F_r), Y (N_r,)) pair per relation, in plan order; the
+        newest ``row_capacity`` rows win if N_r exceeds it) and return
+        (Xp, Yp, row_mask) views — the fused decide uploads these once and
+        donates the device buffers to the compiled pipeline."""
         self._Xp[:] = 0.0
         self._Yp[:] = 0.0
         self._rmask[:] = 0.0
@@ -333,10 +348,38 @@ class BatchedFitPlan:
             self._Xp[i, :n, :X.shape[1]] = X[-n:]
             self._Yp[i, :n] = Y[-n:]
             self._rmask[i, :n] = 1.0
-        w = _fit_batched(jnp.asarray(self._Xp), jnp.asarray(self._Yp),
-                         jnp.asarray(self._rmask), self._E, self._tmask,
+        return self._Xp, self._Yp, self._rmask
+
+    def fill_packed(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
+                    ) -> np.ndarray:
+        """``fill`` returning the single flat backing buffer — upload once,
+        ``unpack`` inside the compiled pipeline (a free reshape at trace)."""
+        self.fill(data)
+        return self._buf
+
+    def unpack(self, buf):
+        """Flat (traced) buffer -> (Xp, Yp, row_mask) with this plan's
+        static shapes."""
+        r, c, f = self.n_relations, self.row_capacity, self.f_max
+        nx, ny = r * c * f, r * c
+        return (buf[:nx].reshape(r, c, f), buf[nx:nx + ny].reshape(r, c),
+                buf[nx + ny:].reshape(r, c))
+
+    def fit(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
+            ) -> StackedModels:
+        """One standalone batched fit over ``data`` (see ``fill``)."""
+        Xp, Yp, rmask = self.fill(data)
+        w = _fit_batched(jnp.asarray(Xp), jnp.asarray(Yp),
+                         jnp.asarray(rmask), self._E, self._tmask,
                          self._nterms, self._scale, self.ridge,
                          self.max_degree)
+        return StackedModels(w, self._E, self._tmask, self._scale,
+                             self.max_degree, self.labels)
+
+    def stacked(self, w: jnp.ndarray) -> StackedModels:
+        """Wrap already-computed weights (e.g. from a fused pipeline that
+        ran ``fit_batched_arrays`` on-device) in this plan's static
+        metadata — no host transfer."""
         return StackedModels(w, self._E, self._tmask, self._scale,
                              self.max_degree, self.labels)
 

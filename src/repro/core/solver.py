@@ -6,29 +6,33 @@
 
 Two interchangeable backends:
 
-* ``solve_slsqp`` — the paper-faithful backend (scipy SLSQP [39], §V-A), with
-  jax-derived exact gradients and the §IV-B3 warm-start cache handled by the
-  caller (RASK passes the previous assignment as x0).
+* ``solve_pgd`` — the default: projected-gradient ascent with K random
+  restarts, fully ``jit``/``vmap``-compiled, one device dispatch per solve.
+  Projection onto the box/halfspace intersection is exact (bisection on the
+  KKT multiplier, i.e. water-filling).  Final candidates are scored through
+  ``kernels.ops.rask_objective`` (``objective_impl`` selects the pure-jnp
+  oracle or the Pallas kernel).
 
-* ``solve_pgd`` — the beyond-paper backend: projected-gradient ascent with K
-  random restarts, fully ``jit``/``vmap``-compiled. Projection onto the
-  box/halfspace intersection is exact (bisection on the KKT multiplier,
-  i.e. water-filling).
+* ``solve_slsqp`` — the paper-faithful reference (scipy SLSQP [39], §V-A),
+  with jax-derived exact gradients and the §IV-B3 warm-start cache handled
+  by the caller.  It pays one device dispatch and one device->host sync per
+  line-search iteration, which is why it is no longer the default; the
+  parity gate in tests/test_solver.py keeps the two backends within
+  tolerance on the paper scenarios.
 
-Fused objective (the E6 fix)
-----------------------------
-The seed built Eq. (4) as a Python loop over services with dict lookups —
-an XLA graph that *grew* (and recompiled) with |S|, the exact "poor
-parallelization of the numerical solver" the paper's E6 flags.  The default
-objective is now fused over the ``StackedModels`` pytree
-(core/regression.py): one gather pulls every relation's features out of the
-decision vector (R, F_max), one batched polynomial evaluation yields all
-predictions (R,), per-SLO phi is computed from padded per-relation
-predictions with pure array selects, and per-service totals come from one
-``segment_sum``.  The graph size is constant in |S|; SLSQP gradients and the
-PGD backend compile once per problem *shape* — regression weights, exponent
-tables and per-service RPS are all traced arguments, so per-cycle refits
-(even with changed degrees at the same padding) never recompile.
+Functional core
+---------------
+Everything the fused objective needs is carried in a ``ProblemTables``
+pytree (bounds, resource mask, gather/SLO tables), so the same module-level
+functions (``project_capacity``, ``segments_from_tables``, ``pgd_solve``)
+serve three callers:
+
+* ``SolverProblem`` — one problem, its own static tables;
+* ``SolverProblem.solve_many`` — ``vmap`` over B independent problems with
+  the *same* layout and a per-problem capacity vector (one dispatch);
+* ``FleetSolverProblem`` — B per-host subproblems padded to a shared layout
+  (dims, relations, SLOs) and vmapped with per-host capacities, replacing
+  the aggregate-capacity relaxation a Fleet used to be solved against.
 
 The seed's per-service loop objective survives as ``objective_loop`` (used
 by the parity tests and the e7 benchmark's pre-PR baseline); construct
@@ -38,13 +42,15 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Mapping, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, \
+    Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.optimize
 
+from ..kernels import ops as kernel_ops
 from .regression import PolynomialModel, StackedModels, TRACE_COUNTS, \
     stack_models
 from .slo import SLO
@@ -57,7 +63,192 @@ _KIND_PARAM = 0        # metric is a decision parameter: phi = min(a/target, 1)
 _KIND_COMPLETION = 1   # §V-B(a): phi = min(tp_max / (rps * target), 1)
 _KIND_RELATION = 2     # metric is a regression target: phi = min(pred/target, 1)
 
+# bisection depth for the exact water-filling projection: the KKT multiplier
+# lives in [0, max masked headroom] (resource bounds, single digits), so 40
+# halvings put it far below float32 resolution
+_PROJECT_ITERS = 40
+
+# compile-cache size for the jitted PGD variants (keyed on static config);
+# callers alternating configs (e.g. e4 sweeps) stay within this many entries
+_PGD_CACHE_SIZE = 8
+
+# relative capacity slack on emitted assignments: float32 projection can
+# overshoot the budget by ~1e-6 C, which apply-time water-filling would
+# (correctly but noisily) report as a capacity clip; solving against
+# (1 - margin) C keeps every emitted plan strictly feasible in float64
+_CAP_MARGIN = 1e-6
+
 Models = Union[Mapping[str, Mapping[str, PolynomialModel]], StackedModels]
+
+
+class ProblemTables(NamedTuple):
+    """Everything the fused objective/projection needs, as jit-traceable
+    arrays — a plain pytree so a batch of problems is just a leading axis."""
+
+    lower: jnp.ndarray          # (D,)
+    upper: jnp.ndarray          # (D,)
+    resource_mask: jnp.ndarray  # (D,) bool — counted against the capacity
+    rel_gather: jnp.ndarray     # (R, F) int32 — feature indices in a
+    slo_kind: jnp.ndarray       # (Q,) int32  _KIND_*
+    slo_service: jnp.ndarray    # (Q,) int32
+    slo_weight: jnp.ndarray     # (Q,)
+    slo_target: jnp.ndarray     # (Q,)
+    slo_pidx: jnp.ndarray       # (Q,) int32 — decision index (kind 0)
+    slo_ridx: jnp.ndarray       # (Q,) int32 — relation index (kinds 1, 2)
+
+
+# --------------------------------------------------------------------------
+# functional core (shared by SolverProblem / solve_many / FleetSolverProblem)
+# --------------------------------------------------------------------------
+
+def cached_fn(cache: Dict[tuple, callable], key: tuple, build,
+              size: int = _PGD_CACHE_SIZE):
+    """Bounded keyed cache of compiled functions: get-or-build, evicting
+    the oldest entry past ``size`` — the one cache policy shared by every
+    jitted-variant cache (SolverProblem, FleetSolverProblem, RASKAgent)."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = build()
+        if len(cache) >= size:
+            cache.pop(next(iter(cache)))
+        cache[key] = fn
+    return fn
+
+
+def project_capacity(a, lower, upper, mask, capacity,
+                     iters: int = _PROJECT_ITERS):
+    """Exact projection onto {box} ∩ {sum of masked entries <= capacity}
+    (bisection on the KKT multiplier — water-filling).
+
+    Shallow bisections (the per-step projection inside the PGD scan) are
+    unrolled statically: a nested ``fori_loop`` inside every scan step
+    costs a while-loop construct per iteration on CPU backends, which at
+    edge problem sizes dominates the arithmetic it guards."""
+    a = jnp.clip(a, lower, upper)
+
+    def body(_, lam_bounds):
+        lam_lo, lam_hi = lam_bounds
+        lam = 0.5 * (lam_lo + lam_hi)
+        tot = jnp.sum(jnp.where(mask, jnp.clip(a - lam, lower, upper), 0.0))
+        return jnp.where(tot > capacity, lam, lam_lo), \
+            jnp.where(tot > capacity, lam_hi, lam)
+
+    need = jnp.sum(jnp.where(mask, a, 0.0)) > capacity
+    bounds = (jnp.float32(0.0),
+              jnp.max(jnp.where(mask, a - lower, 0.0)) + 1.0)
+    if iters <= 8:          # static unroll — no nested loop construct
+        for i in range(iters):
+            bounds = body(i, bounds)
+        lam_lo, lam_hi = bounds
+    else:
+        lam_lo, lam_hi = jax.lax.fori_loop(0, iters, body, bounds)
+    lam = jnp.where(need, 0.5 * (lam_lo + lam_hi), 0.0)
+    return jnp.where(mask, jnp.clip(a - lam, lower, upper), a)
+
+
+def segments_from_tables(a, tables: ProblemTables, sm: StackedModels, rps,
+                         n_services: int):
+    """Per-service weighted phi totals (n_services,) — one gather, one
+    batched polynomial evaluation, branch-free phi, one segment_sum."""
+    x = a[tables.rel_gather]                              # (R, F)
+    preds = sm.predict_all(x)                             # (R,)
+    svc_rps = rps[tables.slo_service]
+    numer = jnp.where(tables.slo_kind == _KIND_PARAM,
+                      a[tables.slo_pidx], preds[tables.slo_ridx])
+    denom = jnp.where(tables.slo_kind == _KIND_COMPLETION,
+                      jnp.maximum(svc_rps * tables.slo_target, 1e-9),
+                      tables.slo_target)
+    phi = jnp.minimum(numer / denom, 1.0)
+    return jax.ops.segment_sum(tables.slo_weight * phi, tables.slo_service,
+                               num_segments=n_services)
+
+
+def objective_from_tables(a, tables: ProblemTables, sm: StackedModels, rps,
+                          n_services: int):
+    TRACE_COUNTS["objective_fused"] += 1  # trace-time only
+    return jnp.sum(segments_from_tables(a, tables, sm, rps, n_services))
+
+
+def score_candidates(A, tables: ProblemTables, sm: StackedModels, rps,
+                     n_services: int, objective_impl: str = "reference",
+                     interpret: bool = False):
+    """Objective for a batch of candidates (K, D) -> (K,), through the
+    kernels/ dispatch (reference oracle | Pallas | Pallas interpret)."""
+    seg = kernel_ops.rask_objective(
+        A, tables.rel_gather, sm.w, sm.exponents, sm.term_mask, sm.x_scale,
+        tables.slo_kind, tables.slo_service, tables.slo_weight,
+        tables.slo_target, tables.slo_pidx, tables.slo_ridx, rps,
+        n_services=n_services, max_degree=sm.max_degree,
+        impl=objective_impl, interpret=interpret)
+    return jnp.sum(seg, axis=-1)
+
+
+def pgd_solve(x0, key, tables: ProblemTables, sm: StackedModels, rps,
+              capacity, *, n_starts: int, iters: int, lr: float,
+              n_services: int, objective_impl: str = "reference",
+              interpret: bool = False):
+    """Multi-start projected-gradient ascent for one problem instance.
+
+    Pure function of its arguments (static config aside) — ``vmap`` it over
+    a leading axis of (x0, key, tables, sm, rps, capacity) to solve B
+    problems in one dispatch.
+
+    Tuned for single-digit-millisecond edge decide cycles: the interior
+    steps use a shallow bisection projection (feasibility within ~1% is
+    plenty mid-ascent; the epilogue re-projects exactly), the step size
+    follows a cosine decay from ``lr`` (large early moves, fine late
+    polish — recovers the quality of 4x more constant-rate iterations),
+    and the start set is structured — the warm start, the water-filled
+    upper bounds, the box midpoint, then uniform draws — so few restarts
+    still cover the basins that matter.
+    """
+    lo, hi, mask = tables.lower, tables.upper, tables.resource_mask
+    grad_fn = jax.grad(objective_from_tables)
+    lr_t = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.arange(iters) / iters)) \
+        + 1e-3
+
+    def one_start(a0):
+        def step(carry, lr_i):
+            a, m, v, t = carry
+            g = grad_fn(a, tables, sm, rps, n_services)
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * g * g
+            mh = m / (1 - 0.9 ** t)
+            vh = v / (1 - 0.999 ** t)
+            a = project_capacity(a + lr_i * (hi - lo) * mh /
+                                 (jnp.sqrt(vh) + 1e-8), lo, hi, mask,
+                                 capacity, iters=6)
+            return (a, m, v, t + 1.0), None
+
+        init = (project_capacity(a0, lo, hi, mask, capacity, iters=6),
+                jnp.zeros_like(a0), jnp.zeros_like(a0), jnp.float32(1.0))
+        (a, _, _, _), _ = jax.lax.scan(step, init, lr_t, unroll=4)
+        return project_capacity(a, lo, hi, mask,
+                                capacity * (1.0 - _CAP_MARGIN))
+
+    top = project_capacity(hi, lo, hi, mask, capacity)
+    mid = project_capacity(lo + 0.5 * (hi - lo), lo, hi, mask, capacity)
+    structured = jnp.stack([x0, top, mid])[:n_starts]     # x0 first
+    u = jax.random.uniform(key, (max(n_starts - 3, 0), x0.shape[0]))
+    starts = jnp.concatenate(
+        [structured, lo[None, :] + u * (hi - lo)[None, :]], axis=0)
+    finals = jax.vmap(one_start)(starts)                  # (K, D)
+    scores = score_candidates(finals, tables, sm, rps, n_services,
+                              objective_impl, interpret)
+    # tie-break toward the warm start: the regression is only trustworthy
+    # near sampled configurations, so among (near-)equal model optima prefer
+    # the one closest to the validated operating point (the same
+    # stabilization E5 observes for caching).
+    dist = jnp.linalg.norm(
+        (finals - x0[None, :]) / jnp.maximum(hi - lo, 1e-6)[None, :], axis=-1)
+    adj = jnp.where(jnp.isfinite(scores), scores - 5e-3 * dist, -jnp.inf)
+    best = jnp.argmax(adj)
+    # degenerate models can NaN every start: fall back to x0
+    ok = jnp.isfinite(scores[best]) & jnp.all(jnp.isfinite(finals[best]))
+    a = jnp.where(ok, finals[best],
+                  project_capacity(x0, lo, hi, mask,
+                                   capacity * (1.0 - _CAP_MARGIN)))
+    return a, jnp.where(ok, scores[best], jnp.float32(-jnp.inf))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,12 +303,15 @@ class SolverProblem:
         # (fetching value and gradient separately doubles the sync cost,
         # which dominates the per-iteration time at edge problem sizes)
         self._slsqp_vg1 = jax.jit(self._vg_cat)
-        # eager `project` dispatches its 50-step bisection op-by-op (~100 ms
-        # on an edge-class CPU); the jitted alias costs ~100 us and is used
-        # by every solve epilogue and RAND_PARAM draw
+        # eager `project` dispatches its bisection op-by-op (~100 ms on an
+        # edge-class CPU); the jitted alias costs ~100 us and is used by
+        # every solve epilogue and RAND_PARAM draw
         self._project = jax.jit(self.project)
         self._bounds = list(zip(self.lower.tolist(), self.upper.tolist()))
-        self._pgd = None  # compiled lazily (static restart count / iters)
+        # compiled PGD variants, keyed on their static config — a *dict*
+        # (bounded) rather than a single slot, so callers alternating
+        # configs (e.g. e4 dimension sweeps) do not thrash recompiles
+        self._pgd_fns: Dict[tuple, callable] = {}
 
     def _vg_cat(self, a, models, rps, capacity):
         v, g = jax.value_and_grad(self._neg_objective)(a, models, rps, capacity)
@@ -168,6 +362,16 @@ class SolverProblem:
         self._slo_target = np.asarray(target, np.float32)
         self._slo_pidx = np.asarray(pidx, np.int32)
         self._slo_ridx = np.asarray(ridx, np.int32)
+        self.tables = ProblemTables(
+            lower=jnp.asarray(self.lower), upper=jnp.asarray(self.upper),
+            resource_mask=jnp.asarray(self.resource_mask),
+            rel_gather=jnp.asarray(self._rel_gather),
+            slo_kind=jnp.asarray(self._slo_kind),
+            slo_service=jnp.asarray(self._slo_service),
+            slo_weight=jnp.asarray(self._slo_weight),
+            slo_target=jnp.asarray(self._slo_target),
+            slo_pidx=jnp.asarray(self._slo_pidx),
+            slo_ridx=jnp.asarray(self._slo_ridx))
 
     # -- model representation -------------------------------------------------
     def stack(self, models: Models) -> StackedModels:
@@ -190,7 +394,8 @@ class SolverProblem:
         """
         if not self.fused:
             return self.objective_loop(a, models, rps)
-        return self._objective_fused(a, self.stack(models), rps)
+        return objective_from_tables(a, self.tables, self.stack(models), rps,
+                                     len(self.specs))
 
     def per_service_fulfillment(self, a, models: Models, rps):
         """Per-service weighted phi totals (|S|,) — the segment_sum the fused
@@ -198,24 +403,7 @@ class SolverProblem:
         return self._segments(a, self.stack(models), rps)
 
     def _segments(self, a, sm: StackedModels, rps):
-        x = a[jnp.asarray(self._rel_gather)]                  # (R, F_max)
-        preds = sm.predict_all(x)                             # (R,)
-        kind = jnp.asarray(self._slo_kind)
-        tgt = jnp.asarray(self._slo_target)
-        svc_rps = rps[jnp.asarray(self._slo_service)]
-        numer = jnp.where(kind == _KIND_PARAM,
-                          a[jnp.asarray(self._slo_pidx)],
-                          preds[jnp.asarray(self._slo_ridx)])
-        denom = jnp.where(kind == _KIND_COMPLETION,
-                          jnp.maximum(svc_rps * tgt, 1e-9), tgt)
-        phi = jnp.minimum(numer / denom, 1.0)
-        return jax.ops.segment_sum(jnp.asarray(self._slo_weight) * phi,
-                                   jnp.asarray(self._slo_service),
-                                   num_segments=len(self.specs))
-
-    def _objective_fused(self, a, sm: StackedModels, rps):
-        TRACE_COUNTS["objective_fused"] += 1  # trace-time only
-        return jnp.sum(self._segments(a, sm, rps))
+        return segments_from_tables(a, self.tables, sm, rps, len(self.specs))
 
     def objective_loop(self, a, models, rps):
         """The seed's per-service Python-loop objective (graph grows with
@@ -265,26 +453,12 @@ class SolverProblem:
 
     # -- projection onto {box} ∩ {sum of resources <= C} --------------------
     def project(self, a, capacity):
-        mask = jnp.asarray(self.resource_mask)
-        lo = jnp.asarray(self.lower)
-        hi = jnp.asarray(self.upper)
-        a = jnp.clip(a, lo, hi)
+        return project_capacity(a, jnp.asarray(self.lower),
+                                jnp.asarray(self.upper),
+                                jnp.asarray(self.resource_mask), capacity,
+                                iters=50)
 
-        def body(_, lam_bounds):
-            lam_lo, lam_hi = lam_bounds
-            lam = 0.5 * (lam_lo + lam_hi)
-            tot = jnp.sum(jnp.where(mask, jnp.clip(a - lam, lo, hi), 0.0))
-            return jnp.where(tot > capacity, lam, lam_lo), \
-                jnp.where(tot > capacity, lam_hi, lam)
-
-        need = jnp.sum(jnp.where(mask, a, 0.0)) > capacity
-        lam_lo, lam_hi = jax.lax.fori_loop(
-            0, 50, body, (jnp.float32(0.0),
-                          jnp.max(jnp.where(mask, a - lo, 0.0)) + 1.0))
-        lam = jnp.where(need, 0.5 * (lam_lo + lam_hi), 0.0)
-        return jnp.where(mask, jnp.clip(a - lam, lo, hi), a)
-
-    # -- backend 1: paper-faithful SLSQP ------------------------------------
+    # -- backend 1: paper-faithful SLSQP reference ----------------------------
     def solve_slsqp(self, models: Models, rps, x0, capacity: float,
                     maxiter: int = 100) -> Tuple[np.ndarray, float]:
         if self.fused:
@@ -318,71 +492,249 @@ class SolverProblem:
         a = np.asarray(proj(jnp.asarray(res.x, jnp.float32), cap))
         return a, -float(res.fun)
 
-    # -- backend 2: beyond-paper vmapped multi-start PGD ---------------------
-    def _build_pgd(self, n_starts: int, iters: int, lr: float):
-        lo = jnp.asarray(self.lower)
-        hi = jnp.asarray(self.upper)
+    # -- backend 2 (default): vmapped multi-start PGD -------------------------
+    def _pgd_fn(self, n_starts: int, iters: int, lr: float,
+                objective_impl: str, interpret: bool, many: bool = False,
+                batched_models: bool = False):
+        key = (n_starts, iters, lr, objective_impl, interpret, many,
+               batched_models)
 
-        def one_start(a0, models, rps, capacity):
-            grad_fn = jax.grad(self.objective)
+        def build():
+            core = partial(pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
+                           n_services=len(self.specs),
+                           objective_impl=objective_impl, interpret=interpret)
+            if many:
+                core = jax.vmap(core, in_axes=(0, 0, None,
+                                               0 if batched_models else None,
+                                               0, 0))
+            return jax.jit(core)
 
-            def step(carry, _):
-                a, m, v, t = carry
-                g = grad_fn(a, models, rps)
-                m = 0.9 * m + 0.1 * g
-                v = 0.999 * v + 0.001 * g * g
-                mh = m / (1 - 0.9 ** t)
-                vh = v / (1 - 0.999 ** t)
-                a = self.project(a + lr * (hi - lo) * mh /
-                                 (jnp.sqrt(vh) + 1e-8), capacity)
-                return (a, m, v, t + 1.0), None
-
-            init = (self.project(a0, capacity), jnp.zeros_like(a0),
-                    jnp.zeros_like(a0), jnp.float32(1.0))
-            (a, _, _, _), _ = jax.lax.scan(step, init, None, length=iters)
-            return a, self.objective(a, models, rps)
-
-        @partial(jax.jit, static_argnums=())
-        def run(x0, key, models, rps, capacity):
-            u = jax.random.uniform(key, (n_starts - 1, self.dim))
-            starts = jnp.concatenate(
-                [x0[None, :], lo[None, :] + u * (hi - lo)[None, :]], axis=0)
-            finals, scores = jax.vmap(
-                lambda s: one_start(s, models, rps, capacity))(starts)
-            # tie-break toward the warm start: the regression is only
-            # trustworthy near sampled configurations, so among (near-)equal
-            # model optima prefer the one closest to the validated operating
-            # point (the same stabilization E5 observes for caching).
-            dist = jnp.linalg.norm(
-                (finals - x0[None, :]) / jnp.maximum(hi - lo, 1e-6)[None, :],
-                axis=-1)
-            adj = jnp.where(jnp.isfinite(scores), scores - 1e-3 * dist,
-                            -jnp.inf)
-            best = jnp.argmax(adj)
-            # degenerate models can NaN every start: fall back to x0
-            ok = jnp.isfinite(scores[best]) \
-                & jnp.all(jnp.isfinite(finals[best]))
-            a = jnp.where(ok, finals[best], self.project(x0, capacity))
-            return a, jnp.where(ok, scores[best], jnp.float32(-jnp.inf))
-
-        return run
+        return cached_fn(self._pgd_fns, key, build)
 
     def solve_pgd(self, models: Models, rps, x0, capacity: float, *,
-                  n_starts: int = 8, iters: int = 120, lr: float = 0.05,
-                  seed: int = 0) -> Tuple[np.ndarray, float]:
-        if self.fused:
-            models = self.stack(models)
-        key = (n_starts, iters, lr)
-        if self._pgd is None or self._pgd[0] != key:
-            self._pgd = (key, self._build_pgd(n_starts, iters, lr))
-        run = self._pgd[1]
-        a, score = run(jnp.asarray(x0, jnp.float32),
-                       jax.random.PRNGKey(seed), models,
-                       jnp.asarray(rps, jnp.float32), jnp.float32(capacity))
+                  n_starts: int = 6, iters: int = 32, lr: float = 0.18,
+                  seed: int = 0, objective_impl: str = "reference",
+                  interpret: bool = False) -> Tuple[np.ndarray, float]:
+        sm = self.stack(models)
+        fn = self._pgd_fn(n_starts, iters, lr, objective_impl, interpret)
+        a, score = fn(jnp.asarray(x0, jnp.float32), jax.random.PRNGKey(seed),
+                      self.tables, sm, jnp.asarray(rps, jnp.float32),
+                      jnp.float32(capacity))
         return np.asarray(a), float(score)
+
+    def solve_many(self, models: Models, rps, x0, capacities, *,
+                   n_starts: int = 6, iters: int = 32, lr: float = 0.18,
+                   seed: int = 0, objective_impl: str = "reference",
+                   interpret: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Solve B independent instances of this problem layout in ONE
+        vmapped dispatch instead of a Python loop.
+
+        rps (B, |S|), x0 (B, dim), capacities (B,) are per-problem;
+        ``models`` is either one ``StackedModels`` shared by every instance
+        or a stacked batch of them (leaves with a leading B axis).  Returns
+        (assignments (B, dim), scores (B,)).
+        """
+        sm = self.stack(models)
+        batched = sm.w.ndim == 3
+        x0 = jnp.asarray(x0, jnp.float32)
+        fn = self._pgd_fn(n_starts, iters, lr, objective_impl, interpret,
+                          many=True, batched_models=batched)
+        keys = jax.random.split(jax.random.PRNGKey(seed), x0.shape[0])
+        a, scores = fn(x0, keys, self.tables, sm,
+                       jnp.asarray(rps, jnp.float32),
+                       jnp.asarray(capacities, jnp.float32))
+        return np.asarray(a), np.asarray(scores)
 
     # -- Eq. (3): RAND_PARAM — uniform draw within bounds + constraint -------
     def random_assignment(self, rng: np.random.Generator,
                           capacity: float) -> np.ndarray:
         a = rng.uniform(self.lower, self.upper).astype(np.float32)
         return np.asarray(self._project(jnp.asarray(a), jnp.float32(capacity)))
+
+
+class FleetSolverProblem:
+    """Per-host capacity solve for a multi-device Fleet.
+
+    The global ``SolverProblem`` flattens all |S| services into one decision
+    vector and (on a Fleet) used to optimize against the *aggregate* capacity
+    relaxation, leaving per-host limits to apply-time clipping.  The fleet
+    objective is separable per service and the constraints are per host, so
+    the problem decomposes exactly into B independent per-host subproblems —
+    this class pads them (dims, relations, SLOs) to one shared layout and
+    ``vmap``s ``pgd_solve`` over the batch with a **per-host capacity
+    vector**: one dispatch decides for every host, and the resulting plans
+    are per-host feasible by construction (no capacity clips in the receipt).
+    """
+
+    def __init__(self, problem: SolverProblem, host_of: Mapping[str, str],
+                 capacities: Mapping[str, float]):
+        """``host_of``: service name (spec.name) -> host name;
+        ``capacities``: host name -> resource budget C_h."""
+        self.problem = problem
+        self.hosts: Tuple[str, ...] = tuple(sorted(
+            {host_of[s.name] for s in problem.specs}))
+        hidx = {h: b for b, h in enumerate(self.hosts)}
+        B = len(self.hosts)
+        self.capacities = np.asarray([capacities[h] for h in self.hosts],
+                                     np.float32)
+
+        svc_of_host: List[List[int]] = [[] for _ in range(B)]
+        for i, s in enumerate(problem.specs):
+            svc_of_host[hidx[host_of[s.name]]].append(i)
+        self.n_services_max = max(len(v) for v in svc_of_host)
+
+        # decision-vector layout: host-local slots <-> global indices
+        dims = [sum(problem.specs[i].n_params for i in svcs)
+                for svcs in svc_of_host]
+        d_max = max(dims)
+        param_take = np.zeros((B, d_max), np.int64)
+        lower = np.zeros((B, d_max), np.float32)
+        upper = np.zeros((B, d_max), np.float32)   # padded slots pin to 0
+        mask = np.zeros((B, d_max), bool)
+        inv_b = np.zeros(problem.dim, np.int64)
+        inv_d = np.zeros(problem.dim, np.int64)
+        g2slot = np.zeros(problem.dim, np.int64)
+        svc_local = np.zeros(len(problem.specs), np.int64)
+        for b, svcs in enumerate(svc_of_host):
+            d = 0
+            for si, i in enumerate(svcs):
+                svc_local[i] = si
+                for j in range(problem.specs[i].n_params):
+                    g = problem.offsets[i] + j
+                    param_take[b, d] = g
+                    lower[b, d] = problem.lower[g]
+                    upper[b, d] = problem.upper[g]
+                    mask[b, d] = problem.resource_mask[g]
+                    inv_b[g], inv_d[g], g2slot[g] = b, d, d
+                    d += 1
+
+        # relations: per-host rows gathered out of the global stack
+        rel_of_host: List[List[int]] = [[] for _ in range(B)]
+        for r, (i, *_rest) in enumerate(problem.relations):
+            rel_of_host[hidx[host_of[problem.specs[i].name]]].append(r)
+        r_max = max(max((len(v) for v in rel_of_host), default=1), 1)
+        f_max = problem._rel_gather.shape[1]
+        rel_take = np.zeros((B, r_max), np.int64)
+        rel_valid = np.zeros((B, r_max), np.float32)
+        rel_gather = np.zeros((B, r_max, f_max), np.int32)
+        rel_local = np.zeros(max(len(problem.relations), 1), np.int64)
+        for b, rels in enumerate(rel_of_host):
+            for rl, r in enumerate(rels):
+                rel_take[b, rl] = r
+                rel_valid[b, rl] = 1.0
+                rel_local[r] = rl
+                rel_gather[b, rl] = g2slot[problem._rel_gather[r]]
+
+        # SLOs: per-host subset of the global phi table, weight-0 padding
+        slo_of_host: List[List[int]] = [[] for _ in range(B)]
+        for q, i in enumerate(problem._slo_service):
+            slo_of_host[hidx[host_of[problem.specs[int(i)].name]]].append(q)
+        q_max = max(max((len(v) for v in slo_of_host), default=1), 1)
+        kind = np.zeros((B, q_max), np.int32)
+        svc = np.zeros((B, q_max), np.int32)
+        weight = np.zeros((B, q_max), np.float32)
+        target = np.ones((B, q_max), np.float32)   # pad 1.0: no divide-by-0
+        pidx = np.zeros((B, q_max), np.int32)
+        ridx = np.zeros((B, q_max), np.int32)
+        for b, qs in enumerate(slo_of_host):
+            for ql, q in enumerate(qs):
+                kind[b, ql] = problem._slo_kind[q]
+                svc[b, ql] = svc_local[problem._slo_service[q]]
+                weight[b, ql] = problem._slo_weight[q]
+                target[b, ql] = problem._slo_target[q]
+                pidx[b, ql] = g2slot[problem._slo_pidx[q]]
+                ridx[b, ql] = rel_local[problem._slo_ridx[q]]
+
+        # per-problem rps gather: host-local service slot -> global service
+        svc_take = np.zeros((B, self.n_services_max), np.int64)
+        for b, svcs in enumerate(svc_of_host):
+            for si, i in enumerate(svcs):
+                svc_take[b, si] = i
+
+        self.tables = ProblemTables(
+            lower=jnp.asarray(lower), upper=jnp.asarray(upper),
+            resource_mask=jnp.asarray(mask),
+            rel_gather=jnp.asarray(rel_gather),
+            slo_kind=jnp.asarray(kind), slo_service=jnp.asarray(svc),
+            slo_weight=jnp.asarray(weight), slo_target=jnp.asarray(target),
+            slo_pidx=jnp.asarray(pidx), slo_ridx=jnp.asarray(ridx))
+        self._param_take = jnp.asarray(param_take)
+        self._rel_take = jnp.asarray(rel_take)
+        self._rel_valid = jnp.asarray(rel_valid)
+        self._svc_take = jnp.asarray(svc_take)
+        self._inv_b = jnp.asarray(inv_b)
+        self._inv_d = jnp.asarray(inv_d)
+        self._caps = jnp.asarray(self.capacities)
+        self._runs: Dict[tuple, callable] = {}
+        self._project_many = jax.jit(self._project_global)
+
+    # -- device-side building blocks ------------------------------------------
+    def gather_models(self, sm: StackedModels) -> StackedModels:
+        """Per-host batched view (leaves (B, R_max, ...)) of the global
+        stacked models — device gathers, no host sync; padded relation rows
+        are masked out entirely."""
+        take = self._rel_take
+        return StackedModels(
+            sm.w[take], sm.exponents[take],
+            sm.term_mask[take] * self._rel_valid[:, :, None],
+            sm.x_scale[take], sm.max_degree, ())
+
+    def split(self, a):
+        """Global decision vector (dim,) -> per-host padded (B, D_max)."""
+        return jnp.clip(a[self._param_take], self.tables.lower,
+                        self.tables.upper)
+
+    def join(self, A):
+        """Per-host padded (B, D_max) -> global decision vector (dim,)."""
+        return A[self._inv_b, self._inv_d]
+
+    def _project_global(self, a):
+        proj = jax.vmap(project_capacity)(
+            self.split(a), self.tables.lower, self.tables.upper,
+            self.tables.resource_mask, self._caps * (1.0 - _CAP_MARGIN))
+        return self.join(proj)
+
+    # -- the fleet solve -------------------------------------------------------
+    def _run(self, n_starts: int, iters: int, lr: float, objective_impl: str,
+             interpret: bool):
+        key = (n_starts, iters, lr, objective_impl, interpret)
+
+        def build():
+            core = jax.vmap(
+                partial(pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
+                        n_services=self.n_services_max,
+                        objective_impl=objective_impl, interpret=interpret))
+
+            def run(x0g, key, sm, rps_g, caps):
+                smb = self.gather_models(sm)
+                keys = jax.random.split(key, len(self.hosts))
+                A, scores = core(self.split(x0g), keys, self.tables, smb,
+                                 rps_g[self._svc_take], caps)
+                return self.join(A), scores
+
+            return jax.jit(run)
+
+        return cached_fn(self._runs, key, build)
+
+    def solve_many(self, models: Models, rps, x0, *, n_starts: int = 6,
+                   iters: int = 32, lr: float = 0.18, seed: int = 0,
+                   objective_impl: str = "reference",
+                   interpret: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+        """One vmapped dispatch deciding every host's services against its
+        OWN capacity.  ``rps`` (|S|,) and ``x0`` (dim,) are in the global
+        problem's order; returns (global assignment (dim,), per-host scores
+        (B,))."""
+        sm = self.problem.stack(models)
+        fn = self._run(n_starts, iters, lr, objective_impl, interpret)
+        a, scores = fn(jnp.asarray(x0, jnp.float32),
+                       jax.random.PRNGKey(seed), sm,
+                       jnp.asarray(rps, jnp.float32), self._caps)
+        return np.asarray(a), np.asarray(scores)
+
+    # -- Eq. (3) under per-host constraints -----------------------------------
+    def random_assignment(self, rng: np.random.Generator) -> np.ndarray:
+        """Uniform draw within bounds, projected onto each host's budget."""
+        a = rng.uniform(self.problem.lower,
+                        self.problem.upper).astype(np.float32)
+        return np.asarray(self._project_many(jnp.asarray(a)))

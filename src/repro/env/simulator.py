@@ -280,10 +280,11 @@ class CycleRecord:
     t: float
     fulfillment: float
     per_service: Dict[str, float]
-    runtime_s: float
+    runtime_s: float                      # steady-state fit + solve
     explored: bool
     rps: Dict[str, float]
     receipt: Optional[PlanReceipt] = None
+    compile_s: float = 0.0                # first-solve jit compile time
 
 
 class EdgeEnvironment:
@@ -381,7 +382,7 @@ class EdgeEnvironment:
             info = getattr(agent, "last_decision", None) or DecisionInfo()
             return CycleResult(getattr(agent, "rounds", -1), info.explored,
                                receipt.applied(), info.runtime_s, info.score,
-                               receipt=receipt)
+                               receipt=receipt, compile_s=info.compile_s)
         return agent.cycle(self.t)
 
     # -- main loop ----------------------------------------------------------------
@@ -406,7 +407,8 @@ class EdgeEnvironment:
                     result.runtime_s if result else 0.0,
                     result.explored if result else False,
                     {k: self.services[k].rps for k in self.services},
-                    receipt=result.receipt if result else None)
+                    receipt=result.receipt if result else None,
+                    compile_s=result.compile_s if result else 0.0)
                 history.append(rec)
                 if on_cycle:
                     on_cycle(rec)

@@ -43,6 +43,27 @@ def decode_attention(q, k_cache, v_cache, length, start=0, *,
         interpret=interpret or impl == "pallas_interpret")
 
 
+@partial(jax.jit, static_argnames=("n_services", "max_degree", "impl",
+                                   "interpret"))
+def rask_objective(A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
+                   slo_service, slo_weight, slo_target, slo_pidx, slo_ridx,
+                   rps, *, n_services: int, max_degree: int,
+                   impl: str = "reference", interpret: bool = False):
+    """A: (K, D) candidate assignments -> (K, |S|) per-service weighted SLO
+    fulfillment (autoscaler Eq. (4) inner evaluation; see ref.py for shapes)."""
+    if impl == "reference":
+        return ref.rask_objective_reference(
+            A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
+            slo_service, slo_weight, slo_target, slo_pidx, slo_ridx, rps,
+            n_services=n_services, max_degree=max_degree)
+    from .rask_objective import rask_objective_pallas
+    return rask_objective_pallas(
+        A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
+        slo_service, slo_weight, slo_target, slo_pidx, slo_ridx, rps,
+        n_services=n_services, max_degree=max_degree,
+        interpret=interpret or impl == "pallas_interpret")
+
+
 @partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
 def ssd(x, dt, A, B, C, *, chunk: int = 128, initial_state=None,
         impl: str = "pallas", interpret: bool = False):

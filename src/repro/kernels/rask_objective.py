@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the batched RASK objective evaluation.
+
+The autoscaling solver's hot inner op scores K candidate assignments
+against the stacked polynomial models and SLO tables: a (R, F) feature
+gather out of each decision vector, a batched polynomial evaluation, a
+branch-free per-SLO phi and a per-service segment-sum (see
+core/solver.py::_segments_tables).  Gathers and scatters map poorly onto
+the TPU vector unit, so the kernel restructures every indexed access as a
+dense matmul with a precomputed one-hot selection matrix (MXU-friendly):
+
+* feature gather   -> A @ G^T   with G (R*F, D) one-hot of ``rel_gather``;
+* parameter pick   -> A @ P^T   with P (Q, D)  one-hot of ``slo_pidx``;
+* relation pick    -> preds @ Rsel^T (Q, R one-hot of ``slo_ridx``);
+* segment-sum      -> (weight * phi) @ Ssel (Q, S one-hot of the SLO's
+  service), which also broadcasts per-service rps as rps @ Ssel^T.
+
+The polynomial term products are accumulated from statically-unrolled
+powers x^0..x^max_degree selected by exponent equality — no ``jnp.power``,
+bit-compatible with the pure-jnp expansion.  Grid: one program per block
+of ``BLOCK_K`` starts; every table rides whole in VMEM (edge problem
+sizes — R, T, F, Q, S — are all tens at most, far under the tile budget;
+on real hardware the lane dims would additionally be padded to 128).
+
+Oracle: kernels/ref.py::rask_objective_reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_K = 8
+
+
+def _kernel(a_ref, gsel_ref, psel_ref, rsel_ref, ssel_ref, exp_ref, wm_ref,
+            xinv_ref, kindp_ref, kindc_ref, weight_ref, target_ref, rps_ref,
+            out_ref, *, r_count: int, f_count: int, max_degree: int):
+    a = a_ref[...]                                            # (bk, D)
+    bk = a.shape[0]
+
+    # feature gather as one matmul, then normalize by the model's x_scale
+    x = jnp.dot(a, gsel_ref[...].T,
+                preferred_element_type=jnp.float32)           # (bk, R*F)
+    x = x.reshape(bk, r_count, f_count) * xinv_ref[...][None]
+
+    # polynomial terms: accumulate x^e selected by exponent equality
+    exps = exp_ref[...]                                       # (R, T, F)
+    p = jnp.ones_like(x)                                      # x^0
+    vals = jnp.where(exps[None] == 0, p[:, :, None, :], 0.0)  # (bk, R, T, F)
+    for e in range(1, max_degree + 1):
+        p = p * x
+        vals = vals + jnp.where(exps[None] == e, p[:, :, None, :], 0.0)
+    terms = jnp.prod(vals, axis=-1)                           # (bk, R, T)
+    preds = jnp.sum(terms * wm_ref[...][None], axis=-1)       # (bk, R)
+
+    # branch-free per-SLO phi
+    numer_p = jnp.dot(a, psel_ref[...].T,
+                      preferred_element_type=jnp.float32)     # (bk, Q)
+    numer_r = jnp.dot(preds, rsel_ref[...].T,
+                      preferred_element_type=jnp.float32)     # (bk, Q)
+    is_p = kindp_ref[...]                                     # (1, Q)
+    is_c = kindc_ref[...]
+    tgt = target_ref[...]
+    numer = is_p * numer_p + (1.0 - is_p) * numer_r
+    svc_rps = jnp.dot(rps_ref[...], ssel_ref[...].T,
+                      preferred_element_type=jnp.float32)     # (1, Q)
+    denom = is_c * jnp.maximum(svc_rps * tgt, 1e-9) + (1.0 - is_c) * tgt
+    phi = jnp.minimum(numer / denom, 1.0)
+
+    # per-service segment-sum as one matmul
+    out_ref[...] = jnp.dot(phi * weight_ref[...], ssel_ref[...],
+                           preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_services", "max_degree", "interpret"))
+def rask_objective_pallas(A, rel_gather, w, exponents, term_mask, x_scale,
+                          slo_kind, slo_service, slo_weight, slo_target,
+                          slo_pidx, slo_ridx, rps, *, n_services: int,
+                          max_degree: int, interpret: bool = False):
+    """Shapes/semantics: kernels/ref.py::rask_objective_reference."""
+    A = jnp.asarray(A, jnp.float32)
+    k_count, dim = A.shape
+    r_count, t_count, f_count = exponents.shape
+    q_count = slo_kind.shape[0]
+
+    # one-hot selection matrices (cheap at edge sizes, traced on device)
+    gsel = jax.nn.one_hot(rel_gather.reshape(-1), dim,
+                          dtype=jnp.float32)                  # (R*F, D)
+    psel = jax.nn.one_hot(slo_pidx, dim, dtype=jnp.float32)   # (Q, D)
+    rsel = jax.nn.one_hot(slo_ridx, r_count,
+                          dtype=jnp.float32)                  # (Q, R)
+    ssel = jax.nn.one_hot(slo_service, n_services,
+                          dtype=jnp.float32)                  # (Q, S)
+    wm = jnp.asarray(w, jnp.float32) * term_mask              # (R, T)
+    xinv = 1.0 / jnp.asarray(x_scale, jnp.float32)            # (R, F)
+
+    pad = -k_count % BLOCK_K
+    Ap = jnp.pad(A, ((0, pad), (0, 0)))
+    grid = (Ap.shape[0] // BLOCK_K,)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out = pl.pallas_call(
+        functools.partial(_kernel, r_count=r_count, f_count=f_count,
+                          max_degree=max_degree),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_K, dim), lambda i: (i, 0)),   # A block
+            full(r_count * f_count, dim),                     # gsel
+            full(q_count, dim),                               # psel
+            full(q_count, r_count),                           # rsel
+            full(q_count, n_services),                        # ssel
+            full(r_count, t_count, f_count),                  # exponents
+            full(r_count, t_count),                           # w * term_mask
+            full(r_count, f_count),                           # 1 / x_scale
+            full(1, q_count),                                 # kind == param
+            full(1, q_count),                                 # kind == completion
+            full(1, q_count),                                 # weight
+            full(1, q_count),                                 # target
+            full(1, n_services),                              # rps
+        ],
+        out_specs=pl.BlockSpec((BLOCK_K, n_services), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Ap.shape[0], n_services), jnp.float32),
+        interpret=interpret,
+    )(Ap, gsel, psel, rsel, ssel, jnp.asarray(exponents, jnp.int32), wm,
+      xinv, (slo_kind == 0).astype(jnp.float32)[None],
+      (slo_kind == 1).astype(jnp.float32)[None],
+      jnp.asarray(slo_weight, jnp.float32)[None],
+      jnp.asarray(slo_target, jnp.float32)[None],
+      jnp.asarray(rps, jnp.float32)[None])
+    return out[:k_count]

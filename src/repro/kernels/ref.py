@@ -145,6 +145,63 @@ def ssd_decode_reference(x, dt, A, B, C, state):
     return y.astype(x.dtype), state
 
 
+# -- RASK batched objective (autoscaler Eq. (4) inner evaluation) -------------
+
+def rask_objective_reference(A, rel_gather, w, exponents, term_mask, x_scale,
+                             slo_kind, slo_service, slo_weight, slo_target,
+                             slo_pidx, slo_ridx, rps, *, n_services: int,
+                             max_degree: int):
+    """Per-service weighted SLO fulfillment for K candidate assignments.
+
+    A:          (K, D)        candidate decision vectors (raw parameter units)
+    rel_gather: (R, F)  int32 indices of each relation's features in a
+    w:          (R, T)        stacked polynomial weights (0 on padded terms)
+    exponents:  (R, T, F) int32 term exponent tables (0 on padding)
+    term_mask:  (R, T)        1.0 real term / 0.0 padding
+    x_scale:    (R, F)        feature conditioning (1.0 on padding)
+    slo_kind:   (Q,) int32    0 = parameter metric, 1 = completion, 2 = relation
+    slo_service/slo_weight/slo_target: (Q,) per-SLO service index/weight/target
+    slo_pidx:   (Q,) int32    decision index of the metric (kind 0)
+    slo_ridx:   (Q,) int32    relation index of the metric (kinds 1 and 2)
+    rps:        (S,)          per-service request load
+
+    Returns (K, n_services): sum of weight * min(metric/target, 1) per service,
+    where the completion SLO (kind 1) reads min(pred / (rps * target), 1).
+    Powers are built by cumulative products + gather (no ``jnp.power``), the
+    same multiplication order as core/regression's expansion.
+    """
+    A = jnp.asarray(A, jnp.float32)
+    r_count, t_count, f_count = exponents.shape
+
+    def predict(a):
+        xs = a[rel_gather] / x_scale                              # (R, F)
+        if max_degree:
+            pows = jnp.cumprod(jnp.broadcast_to(
+                xs[:, None, :], (r_count, max_degree, f_count)), axis=1)
+            pows = jnp.concatenate(
+                [jnp.ones((r_count, 1, f_count), xs.dtype), pows], axis=1)
+        else:
+            pows = jnp.ones((r_count, 1, f_count), xs.dtype)
+        vals = jnp.take_along_axis(
+            jnp.broadcast_to(pows[:, None],
+                             (r_count, t_count, max_degree + 1, f_count)),
+            exponents[:, :, None, :], axis=2)[:, :, 0, :]
+        terms = jnp.prod(vals, axis=-1) * term_mask               # (R, T)
+        return jnp.sum(terms * w, axis=-1)                        # (R,)
+
+    def one(a):
+        preds = predict(a)
+        numer = jnp.where(slo_kind == 0, a[slo_pidx], preds[slo_ridx])
+        denom = jnp.where(slo_kind == 1,
+                          jnp.maximum(rps[slo_service] * slo_target, 1e-9),
+                          slo_target)
+        phi = jnp.minimum(numer / denom, 1.0)
+        return jax.ops.segment_sum(slo_weight * phi, slo_service,
+                                   num_segments=n_services)
+
+    return jax.vmap(one)(A)
+
+
 # -- memory-efficient chunked attention (flash-style, pure jnp) ---------------
 #
 # The reference full-mask attention materializes (S, T) score matrices —

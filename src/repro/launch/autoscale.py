@@ -50,7 +50,7 @@ def main(argv=None):
     ap.add_argument("--chips", type=float, default=16.0)
     ap.add_argument("--pattern", default="diurnal",
                     choices=["diurnal", "bursty"])
-    ap.add_argument("--backend", default="slsqp", choices=["slsqp", "pgd"])
+    ap.add_argument("--backend", default="pgd", choices=["pgd", "slsqp"])
     ap.add_argument("--hosts", type=int, default=1,
                     help="edge devices behind one Fleet (chips split evenly)")
     ap.add_argument("--replicas", type=int, default=1,

@@ -133,3 +133,76 @@ def test_ops_dispatch_reference_and_interpret():
     a = ops.flash_attention(q, k, v, impl="reference")
     b = ops.flash_attention(q, k, v, impl="pallas_interpret")
     assert jnp.allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# -- RASK batched objective (autoscaler solve hot path) ----------------------
+
+def _random_objective_case(seed):
+    """Random stacked models + SLO tables + K candidates, via the solver's
+    own table builder so the kernel is tested against real layouts."""
+    import numpy as np
+    from repro.core.regression import fit_polynomial
+    from repro.core.slo import SLO
+    from repro.core.solver import ServiceSpec, SolverProblem
+
+    rng = np.random.default_rng(seed * 2003)
+    n_services = int(rng.integers(1, 6))
+    specs = []
+    for i in range(n_services):
+        slos = [SLO("completion", 1.0, 1.0)]
+        if rng.random() < 0.7:
+            slos.append(SLO("quality", float(rng.uniform(400, 900)), 0.5))
+        if rng.random() < 0.4:
+            slos.append(SLO("tp_max", float(rng.uniform(50, 150)), 0.3))
+        specs.append(ServiceSpec(
+            name=f"s{i}", param_names=("cores", "quality"),
+            lower=(0.1, 100.0), upper=(8.0, 1000.0),
+            resource_mask=(True, False), slos=tuple(slos),
+            relation_features=(("tp_max", (0, 1)),)))
+    problem = SolverProblem(specs)
+    models = {}
+    for s in specs:
+        X = np.c_[rng.uniform(0.1, 8, 60), rng.uniform(100, 1000, 60)]
+        Y = rng.uniform(10, 30) * X[:, 0] - X[:, 1] / rng.uniform(50, 200)
+        models[s.name] = {"tp_max": fit_polynomial(
+            X.astype(np.float32), Y.astype(np.float32),
+            int(rng.integers(1, 4)), x_scale=[8.0, 1000.0])}
+    sm = problem.stack(models)
+    K = int(rng.integers(1, 20))     # deliberately not a BLOCK_K multiple
+    A = jnp.asarray(np.stack([
+        problem.random_assignment(rng, float(rng.uniform(2, 20)))
+        for _ in range(K)]))
+    rps = jnp.asarray(rng.uniform(1, 100, n_services).astype(np.float32))
+    return problem, sm, A, rps, n_services
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_rask_objective_pallas_matches_reference(seed):
+    """ISSUE 3 acceptance: the Pallas objective kernel matches the ref.py
+    oracle to 1e-4 in interpret mode, across shapes/degrees/K paddings."""
+    problem, sm, A, rps, n_services = _random_objective_case(seed)
+    t = problem.tables
+    args = (A, t.rel_gather, sm.w, sm.exponents, sm.term_mask, sm.x_scale,
+            t.slo_kind, t.slo_service, t.slo_weight, t.slo_target,
+            t.slo_pidx, t.slo_ridx, rps)
+    kw = dict(n_services=n_services, max_degree=sm.max_degree)
+    want = ops.rask_objective(*args, impl="reference", **kw)
+    got = ops.rask_objective(*args, impl="pallas_interpret", **kw)
+    assert got.shape == (A.shape[0], n_services)
+    assert jnp.allclose(got, want, atol=1e-4, rtol=1e-4), \
+        float(jnp.max(jnp.abs(got - want)))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_rask_objective_reference_matches_solver_segments(seed):
+    """The ref.py oracle IS the solver's fused per-service fulfillment."""
+    problem, sm, A, rps, n_services = _random_objective_case(seed + 100)
+    t = problem.tables
+    want = jnp.stack([problem.per_service_fulfillment(A[i], sm, rps)
+                      for i in range(A.shape[0])])
+    got = ops.rask_objective(
+        A, t.rel_gather, sm.w, sm.exponents, sm.term_mask, sm.x_scale,
+        t.slo_kind, t.slo_service, t.slo_weight, t.slo_target, t.slo_pidx,
+        t.slo_ridx, rps, n_services=n_services, max_degree=sm.max_degree,
+        impl="reference")
+    assert jnp.allclose(got, want, atol=1e-5, rtol=1e-5)

@@ -81,3 +81,82 @@ def test_random_assignment_feasible(seed):
     a = problem.random_assignment(np.random.default_rng(seed), 8.0)
     assert a[problem.resource_mask].sum() <= 8.0 + 1e-3
     assert np.all(a >= problem.lower - 1e-5) and np.all(a <= problem.upper + 1e-5)
+
+
+# -- water-filling projection properties (hypothesis) ------------------------
+
+_PROBLEM = make_problem(3)   # construction is expensive; properties are pure
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(1.0, 30.0))
+def test_project_in_box_and_under_capacity(seed, capacity):
+    import jax.numpy as jnp
+    p = _PROBLEM
+    rng = np.random.default_rng(seed)
+    # deliberately draw outside the box so clipping is exercised too
+    a = rng.uniform(p.lower - 3.0, p.upper + 3.0).astype(np.float32)
+    proj = np.asarray(p._project(jnp.asarray(a), jnp.float32(capacity)))
+    assert np.all(proj >= p.lower - 1e-4)
+    assert np.all(proj <= p.upper + 1e-4)
+    # the resource sum respects the budget whenever the per-parameter
+    # floors allow it (below the summed floors the box wins by design)
+    floor = float(p.lower[p.resource_mask].sum())
+    assert proj[p.resource_mask].sum() <= max(capacity, floor) + 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(1.0, 30.0))
+def test_project_idempotent(seed, capacity):
+    import jax.numpy as jnp
+    p = _PROBLEM
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(p.lower - 3.0, p.upper + 3.0).astype(np.float32)
+    proj = np.asarray(p._project(jnp.asarray(a), jnp.float32(capacity)))
+    again = np.asarray(p._project(jnp.asarray(proj), jnp.float32(capacity)))
+    np.testing.assert_allclose(again, proj, atol=2e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_project_identity_when_feasible(seed):
+    import jax.numpy as jnp
+    p = _PROBLEM
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(p.lower, p.upper).astype(np.float32)
+    slack = float(a[p.resource_mask].sum()) + 1.0   # strictly feasible
+    proj = np.asarray(p._project(jnp.asarray(a), jnp.float32(slack)))
+    np.testing.assert_allclose(proj, a, atol=1e-5)
+
+
+# -- solve_many: one vmapped dispatch over B independent instances ------------
+
+def test_solve_many_matches_per_problem_feasibility():
+    problem = make_problem(3)
+    models = fit_models(problem)
+    rps = np.tile(np.asarray([50.0, 50.0, 50.0], np.float32), (3, 1))
+    rng = np.random.default_rng(0)
+    x0 = np.stack([problem.random_assignment(rng, 8.0) for _ in range(3)])
+    caps = np.asarray([4.0, 8.0, 16.0], np.float32)
+    A, scores = problem.solve_many(models, rps, x0, caps, n_starts=4,
+                                   iters=24)
+    assert A.shape == (3, problem.dim) and scores.shape == (3,)
+    for b in range(3):
+        assert np.all(A[b] >= problem.lower - 1e-4)
+        assert np.all(A[b] <= problem.upper + 1e-4)
+        assert A[b][problem.resource_mask].sum() <= caps[b] + 1e-3
+        assert scores[b] > 0
+    # more capacity can never hurt the (maximized) objective
+    assert scores[2] >= scores[0] - 1e-3
+
+
+def test_backend_parity_gate():
+    """The default PGD backend must stay within tolerance of the
+    paper-faithful SLSQP reference on the e1/e3-style problem."""
+    problem = make_problem(3)
+    models = fit_models(problem)
+    rps = np.array([50.0, 50.0, 50.0], np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(0), 8.0)
+    _, s_slsqp = problem.solve_slsqp(models, rps, x0, 8.0)
+    _, s_pgd = problem.solve_pgd(models, rps, x0, 8.0)
+    assert s_pgd >= s_slsqp - 0.05 * abs(s_slsqp), (s_pgd, s_slsqp)
