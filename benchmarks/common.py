@@ -28,6 +28,20 @@ E3_DURATION = 1800.0
 REPS = 2
 
 
+def bench(fn, reps: int, warmup: int = 2) -> float:
+    """Steady-state microbenchmark helper: median of ``reps`` timed calls
+    after ``warmup`` untimed ones, in us per call (shared by the e6/e7
+    hot-path suites and their CI regression gates)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
 def save(name: str, payload: dict) -> None:
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     (ARTIFACTS / f"{name}.json").write_text(json.dumps(payload, indent=1))

@@ -3,10 +3,35 @@ proportional capacity 8/16/24 cores). Also the beyond-paper comparison:
 the vmapped multi-start PGD solver vs scipy SLSQP at each |S| — the paper's
 Discussion explicitly flags solver parallelization as the fix for E6's
 runtime growth.
+
+``--hetero`` (beyond-paper) exercises the *heterogeneous* fleet engine:
+
+* a seeded two-tier scenario (10 services capacity-placed 2/8 over a
+  4-core and a 16-core device, mixed diurnal/bursty/constant load) driven
+  by RASK end-to-end, with a steady-state recompile guard;
+* a solve microbench on a 2-bucket fleet — hosts of 2 and of 8 services —
+  comparing the bucketed per-host dispatch against the single padded
+  layout (every host padded to the largest) and the sequential per-host
+  loop, plus the bucketed-vs-sequential parity gap (acceptance: <= 1e-5).
+
+Bucketing trades one extra compiled scan per layout bucket for not padding
+small hosts to the largest host's layout, so it pays off once buckets hold
+several hosts each (the XLA-CPU dispatch floor dominates below that) —
+``SOLVE_FLEET`` sizes the committed artifact past that crossover.
+``benchmarks/run.py --check e6`` re-runs the microbench against the
+committed artifact and fails on a solve-time regression, a parity gap, a
+lost speedup, or any steady-state recompile.
 """
 import numpy as np
 
 from . import common
+
+# the 2-bucket acceptance fleet: (n_hosts, services_per_host, cores_per_host)
+SOLVE_FLEET = ((16, 2, 4.0), (8, 8, 16.0))
+SOLVE_REPS = 7
+SCENARIO_REPS = 2
+SCENARIO_DURATION = None     # None -> E3_DURATION / 2 at call time
+HETERO_ARTIFACT = "e6_hetero"
 
 
 def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
@@ -39,7 +64,140 @@ def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
     return results
 
 
-def main():
+def _solve_fleet():
+    """Synthetic 2-bucket fleet problem (SOLVE_FLEET) with fitted paper-like
+    3-parameter services — returns (problem, host_of, caps, models, rps, x0)."""
+    from repro.core.regression import fit_polynomial
+    from repro.core.slo import SLO
+    from repro.core.solver import ServiceSpec, SolverProblem
+
+    specs, host_of, caps = [], {}, {}
+    for tier, (n_hosts, n_svc, cores) in enumerate(SOLVE_FLEET):
+        for h in range(n_hosts):
+            hostname = f"tier{tier}-{h}"
+            caps[hostname] = cores
+            for i in range(n_svc):
+                s = ServiceSpec(
+                    name=f"t{tier}h{h}s{i}",
+                    param_names=("cores", "data_quality", "model_size"),
+                    lower=(0.1, 100.0, 1.0), upper=(8.0, 1000.0, 4.0),
+                    resource_mask=(True, False, False),
+                    slos=(SLO("data_quality", 800.0, 0.5),
+                          SLO("model_size", 3.0, 0.2),
+                          SLO("completion", 1.0, 1.0)),
+                    relation_features=(("tp_max", (0, 1, 2)),))
+                specs.append(s)
+                host_of[s.name] = hostname
+    problem = SolverProblem(specs)
+    rng = np.random.default_rng(0)
+    X = np.c_[rng.uniform(0.1, 8, 300), rng.uniform(100, 1000, 300),
+              rng.uniform(1, 4, 300)]
+    Y = 20 * X[:, 0] - X[:, 1] / 100.0 + 3 * X[:, 2]
+    m = fit_polynomial(X.astype(np.float32), Y.astype(np.float32), 2,
+                       x_scale=[8.0, 1000.0, 4.0])
+    models = {s.name: {"tp_max": m} for s in specs}
+    rps = np.full(len(specs), 50.0, np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(1),
+                                   float(sum(caps.values())))
+    return problem, host_of, caps, models, rps, x0
+
+
+def solve_bench(reps: int = None) -> dict:
+    """Bucketed vs single-padded-layout vs sequential per-host solves on
+    the 2-bucket SOLVE_FLEET, plus the bucketed/sequential parity gap."""
+    from repro.core.solver import FleetSolverProblem
+
+    reps = SOLVE_REPS if reps is None else reps
+
+    problem, host_of, caps, models, rps, x0 = _solve_fleet()
+    fb = FleetSolverProblem(problem, host_of, caps)
+    fu = FleetSolverProblem(problem, host_of, caps, bucketed=False)
+    a_b, _ = fb.solve_many(models, rps, x0)
+    a_q, _ = fb.solve_sequential(models, rps, x0)
+    row = {
+        "hosts": "+".join(f"{n}x{s}svc" for n, s, _ in SOLVE_FLEET),
+        "services": len(problem.specs),
+        "buckets": [list(bk.key) for bk in fb.buckets],
+        "bucketed_us": common.bench(
+            lambda: fb.solve_many(models, rps, x0), reps),
+        "padded_us": common.bench(
+            lambda: fu.solve_many(models, rps, x0), reps),
+        "sequential_us": common.bench(
+            lambda: fb.solve_sequential(models, rps, x0), max(reps // 2, 2)),
+        "parity_max_abs_diff": float(np.max(np.abs(a_b - a_q))),
+    }
+    row["bucketed_speedup"] = row["padded_us"] / row["bucketed_us"]
+    row["sequential_speedup"] = row["sequential_us"] / row["bucketed_us"]
+    return row
+
+
+def scenario_bench(reps: int = None, duration: float = None) -> dict:
+    """The seeded two-tier RASK run: fulfillment + decide runtime + a
+    steady-state recompile guard over extra post-run decides."""
+    from repro.core import RASKAgent, RaskConfig
+    from repro.core.regression import TRACE_COUNTS
+    from repro.env import two_tier_environment
+
+    reps = SCENARIO_REPS if reps is None else reps
+    if duration is None:
+        duration = SCENARIO_DURATION if SCENARIO_DURATION is not None \
+            else common.E3_DURATION / 2
+    runs, recompiles = [], 0
+    for rep in range(reps):
+        env, knowledge = two_tier_environment(duration_s=duration, seed=rep)
+        agent = RASKAgent(env.platform, knowledge,
+                          RaskConfig(xi=20, eta=0.0), seed=rep)
+        runs.append(common.run_agent(env, agent, duration))
+        traces0 = dict(TRACE_COUNTS)
+        for _ in range(3):            # steady state: decides must not retrace
+            agent.decide(agent.observe(env.t))
+        recompiles += sum(TRACE_COUNTS[k] - traces0.get(k, 0)
+                          for k in TRACE_COUNTS)
+    rts = np.concatenate([r["runtime_ms"] for r in runs])
+    fls = np.concatenate([r["fulfillment"] for r in runs])
+    return {
+        "services": 10, "hosts": "1x4core(2svc)+1x16core(8svc)",
+        "median_runtime_ms": float(np.median(rts)),
+        "median_fulfillment": float(np.median(fls)),
+        "mean_fulfillment": float(np.mean(fls)),
+        "steady_state_recompiles": int(recompiles),
+    }
+
+
+def run_hetero(reps: int = None, duration: float = None,
+               solve_reps: int = None) -> dict:
+    results = {"scenario": scenario_bench(reps, duration),
+               "solve": solve_bench(solve_reps)}
+    common.save(HETERO_ARTIFACT, results)
+    return results
+
+
+def report_hetero(r: dict) -> None:
+    s, v = r["scenario"], r["solve"]
+    print(f"e6[hetero-scenario],{s['median_runtime_ms'] * 1e3:.0f},"
+          f"{s['median_fulfillment']:.4f}"
+          f" recompiles={s['steady_state_recompiles']}")
+    print(f"e6[hetero-solve,{v['hosts']}],{v['bucketed_us']:.0f},"
+          f"padded={v['padded_us']:.0f}us"
+          f" speedup={v['bucketed_speedup']:.2f}x"
+          f" seq={v['sequential_us']:.0f}us"
+          f" parity={v['parity_max_abs_diff']:.2e}")
+
+
+def main_hetero():
+    report_hetero(run_hetero())
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hetero", action="store_true",
+                    help="run the heterogeneous-fleet suite instead of the "
+                         "paper's homogeneous scalability sweep")
+    args = ap.parse_args(argv)
+    if args.hetero:
+        main_hetero()
+        return
     r = run()
     for k, v in r.items():
         print(f"e6[{k}],{v['median_runtime_ms'] * 1e3:.0f},"

@@ -26,8 +26,6 @@ All timings are steady-state (post jit warm-up) medians.  The artifact also
 records jit trace counts over the timed window — zero recompiles after the
 first cycle at fixed padding is an acceptance gate of the fused engine.
 """
-import time
-
 import numpy as np
 
 from repro.core.regression import TRACE_COUNTS
@@ -44,15 +42,7 @@ TRAIN_CYCLES = 30    # exploration cycles populating the training table
 ARTIFACT = "e7_hot_path"
 
 
-def _bench(fn, reps: int, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)     # us per call
+_bench = common.bench     # shared steady-state timing helper
 
 
 def _trained_agent(replicas: int, seed: int = 0, hosts: int = 1, **cfg_kw):

@@ -72,6 +72,13 @@ def _report_from_artifacts(name, common) -> bool:
             print(f"e6[{k}],{v['median_runtime_ms'] * 1e3:.0f},"
                   f"{v['median_fulfillment']:.4f}")
         return True
+    if name == "e6h":
+        from . import e6_scalability
+        r = common.load(e6_scalability.HETERO_ARTIFACT)
+        if not r:
+            return False
+        e6_scalability.report_hetero(r)
+        return True
     if name == "e7":
         r = common.load("e7_hot_path")
         if not r:
@@ -80,6 +87,37 @@ def _report_from_artifacts(name, common) -> bool:
         e7_hot_path.report(r)
         return True
     return False
+
+
+def check_e6() -> int:
+    """Heterogeneous-fleet regression gate vs the committed e6 artifact:
+    the bucketed solve must stay within 1.5x of the committed time (CI
+    machine headroom), still beat the single-padded-layout path, match the
+    sequential per-host oracle to 1e-5, and a quick two-tier scenario must
+    finish its steady-state decides without a single jit recompile."""
+    from . import common, e6_scalability
+
+    committed = common.load(e6_scalability.HETERO_ARTIFACT)
+    if not committed or "solve" not in committed:
+        print("e6-check,1,missing-committed-artifact")
+        return 1
+    row = e6_scalability.solve_bench(reps=5)
+    scen = e6_scalability.scenario_bench(reps=1, duration=260.0)
+    common.save("e6_hetero_check", {"scenario": scen, "solve": row})
+    ref = committed["solve"]
+    limit = 1.5 * ref["bucketed_us"]
+    ok = (row["bucketed_us"] <= limit
+          and row["bucketed_speedup"] >= 1.0
+          and row["parity_max_abs_diff"] <= 1e-5
+          and scen["steady_state_recompiles"] == 0)
+    print(f"e6-check[bucketed],{row['bucketed_us']:.0f},"
+          f"limit={limit:.0f}us committed={ref['bucketed_us']:.0f}us")
+    print(f"e6-check[speedup],0,{row['bucketed_speedup']:.2f}x "
+          f"(committed {ref['bucketed_speedup']:.2f}x)")
+    print(f"e6-check[parity],0,{row['parity_max_abs_diff']:.2e}")
+    print(f"e6-check[recompiles],0,{scen['steady_state_recompiles']}")
+    print(f"e6-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
 
 
 def check_e7() -> int:
@@ -126,9 +164,10 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.check:
-        if args.check != "e7":
-            ap.error(f"--check supports only 'e7', got {args.check!r}")
-        sys.exit(check_e7())
+        checks = {"e6": check_e6, "e7": check_e7}
+        if args.check not in checks:
+            ap.error(f"--check supports {sorted(checks)}, got {args.check!r}")
+        sys.exit(checks[args.check]())
 
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,
@@ -145,6 +184,13 @@ def main() -> None:
         e7_hot_path.SOLVE_REPS = 3
         e7_hot_path.TRAIN_CYCLES = 12
         e7_hot_path.ARTIFACT = "e7_hot_path_quick"
+        # CI-sized hetero smoke: one short scenario rep (xi=20 needs 200 s
+        # of exploration; 300 s reaches steady state), same 2-bucket solve
+        # fleet (comparable to the committed record), fewer reps
+        e6_scalability.SCENARIO_REPS = 1
+        e6_scalability.SCENARIO_DURATION = 300.0
+        e6_scalability.SOLVE_REPS = 3
+        e6_scalability.HETERO_ARTIFACT = "e6_hetero_quick"
 
     suites = {
         "e1": e1_convergence.main,
@@ -152,7 +198,8 @@ def main() -> None:
         "e3": e3_sota_comparison.main,
         "e4": e4_dimensions.main,
         "e5": e5_caching.main,
-        "e6": e6_scalability.main,
+        "e6": lambda: e6_scalability.main([]),
+        "e6h": e6_scalability.main_hetero,
         "e7": e7_hot_path.main,
         "roofline": roofline.main,
     }

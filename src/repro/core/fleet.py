@@ -4,8 +4,12 @@ The paper's platform manages one edge device; the ROADMAP north star is many
 services spread over many devices. ``Fleet`` keeps the per-host MUDAPs (each
 with its *own* capacity C and water-filling arbitration) and adds:
 
-* **placement** — ``place()`` registers a service on an explicit host or on
-  the least-loaded one (largest fractional resource headroom);
+* **placement** — ``place()`` registers a service on an explicit host, on
+  the host with the best predicted *marginal SLO fulfillment* (when the
+  caller supplies per-host scores, e.g. ``RASKAgent.placement_scores``), or
+  on the least-loaded one (largest fractional resource headroom);
+  ``rebalance()`` migrates services toward higher-scoring hosts, guarded by
+  a hysteresis threshold so only decisively better moves happen;
 * **plan routing** — ``apply_plan`` splits a fleet-wide ``ScalingPlan`` by
   placement, applies each host's sub-plan transactionally, and merges the
   per-host ``PlanReceipt``s, so an agent proposes one plan for 9+ services
@@ -26,7 +30,7 @@ still optimize the aggregate — with clips reported in the receipt.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .api import ParameterOutcome, PlanReceipt, REASON_UNKNOWN_SERVICE, \
     REJECTED, ScalingPlan
@@ -38,8 +42,13 @@ from .slo import SLO
 class Fleet:
     """Multi-host control plane with the single-host MUDAP surface."""
 
-    def __init__(self, hosts: Sequence[MUDAP]):
+    def __init__(self, hosts: Sequence[MUDAP], hysteresis: float = 0.05):
+        """``hysteresis``: minimum predicted marginal-fulfillment gain over
+        the current host before ``rebalance`` migrates a service (migrations
+        cost settling time and discard telemetry locality, so only
+        decisively better placements move)."""
         self._hosts: Dict[str, MUDAP] = {}
+        self.hysteresis = float(hysteresis)
         for h in hosts:
             if h.host in self._hosts:
                 raise ValueError(f"duplicate host {h.host!r}")
@@ -70,20 +79,33 @@ class Fleet:
     def place(self, sid: ServiceId, api: ApiDescription,
               backend: ServiceBackend, slos: List[SLO],
               assignment: Optional[Dict[str, float]] = None,
-              host: Optional[str] = None) -> str:
-        """Register a service on ``host`` (or the least-loaded host) and
-        record the placement; returns the chosen host name."""
+              host: Optional[str] = None,
+              scores: Optional[Mapping[str, float]] = None) -> str:
+        """Register a service and record the placement; returns the chosen
+        host name.  Host choice, in priority order: an explicit ``host``;
+        the best of ``scores`` (host name -> predicted marginal SLO
+        fulfillment of hosting this service there, e.g. from
+        ``RASKAgent.placement_scores``); the least-loaded host."""
         if host is None:
-            host = self._least_loaded()
+            host = self._best_host(scores) if scores else self._least_loaded()
         if host not in self._hosts:
             raise KeyError(f"unknown host {host!r}")
         self._hosts[host].register(sid, api, backend, slos, assignment)
         self._placement[str(sid)] = host
         return host
 
+    def _best_host(self, scores: Mapping[str, float]) -> str:
+        """Highest marginal-fulfillment host (ties broken by host id)."""
+        known = {h: float(s) for h, s in scores.items() if h in self._hosts}
+        if not known:
+            raise KeyError(f"no known host in scores {sorted(scores)}")
+        return min(known, key=lambda h: (-known[h], h))
+
     def _least_loaded(self) -> str:
-        """Host with the largest worst-case fractional headroom (ties broken
-        by service count, then name, for determinism)."""
+        """Host with the largest worst-case fractional headroom.  All ties
+        — equal headroom, then equal service count — resolve on the host id
+        (NOT registration/dict order), so placement is reproducible across
+        runs regardless of the order hosts were constructed in."""
         def score(h: MUDAP):
             fracs = []
             for r, cap in h.capacity.items():
@@ -93,6 +115,76 @@ class Fleet:
             return (-headroom, len(h.services()), h.host)
 
         return min(self._hosts.values(), key=score).host
+
+    def migrate(self, sid: str, host: str) -> str:
+        """Move a placed service to ``host``: deregister from the source
+        (its holdings are released), re-register on the destination with the
+        same API/SLOs/backend and its last-applied assignment (arbitrated
+        against the destination's own capacity).  A failed destination
+        register restores the source placement, so a migration is
+        all-or-nothing."""
+        key = str(sid)
+        src = self._placement[key]
+        if host not in self._hosts:
+            raise KeyError(f"unknown host {host!r}")
+        if src == host:
+            return host
+        svc = self._hosts[src].service(key)
+        assignment = dict(svc.assignment)
+        self._hosts[src].deregister(key)
+        try:
+            self._hosts[host].register(svc.sid, svc.api, svc.backend,
+                                       list(svc.slos), assignment)
+        except Exception:
+            self._hosts[src].register(svc.sid, svc.api, svc.backend,
+                                      list(svc.slos), assignment)
+            raise
+        self._placement[key] = host
+        return host
+
+    def rebalance(self, scores: Mapping[str, Mapping[str, float]],
+                  hysteresis: Optional[float] = None,
+                  limit: Optional[int] = None) -> List[Tuple[str, str, str]]:
+        """Migrate services toward their highest-scoring hosts.
+
+        ``scores``: sid -> {host -> predicted marginal SLO fulfillment of
+        that service on that host} (see ``RASKAgent.placement_scores``).  A
+        service moves only when its best host (ties: host id) beats its
+        CURRENT host's score by more than the hysteresis threshold — below
+        it ``rebalance`` is a no-op.  Candidate moves are applied in
+        descending-gain order (ties: sid), at most ``limit`` of them.
+
+        ``scores`` is a *snapshot*: marginal fulfillment is
+        contention-coupled (a move changes every other score on the two
+        hosts it touches), so callers applying more than one move should
+        re-score between moves — ``RASKAgent.rebalance`` passes
+        ``limit=1`` per fresh snapshot, which makes each applied move a
+        strict fleet-fulfillment improvement and the loop idempotent once
+        no gain clears the gate.  Returns the applied moves as
+        (sid, from_host, to_host).
+        """
+        gate = self.hysteresis if hysteresis is None else float(hysteresis)
+        candidates: List[Tuple[float, str, str, str]] = []
+        for sid in sorted(scores):
+            src = self._placement.get(sid)
+            if src is None:
+                continue
+            known = {h: float(s) for h, s in scores[sid].items()
+                     if h in self._hosts}
+            # the CURRENT host must be scored: defaulting a missing source
+            # score would turn an incomplete candidate map into a migration
+            # away from a possibly-better host
+            if src not in known:
+                continue
+            best = self._best_host(known)
+            gain = known[best] - known[src]
+            if best != src and gain > gate:
+                candidates.append((-gain, sid, src, best))
+        moves: List[Tuple[str, str, str]] = []
+        for _, sid, src, best in sorted(candidates)[:limit]:
+            self.migrate(sid, best)
+            moves.append((sid, src, best))
+        return moves
 
     def deregister(self, sid: str) -> None:
         key = str(sid)

@@ -110,15 +110,12 @@ class RASKAgent(PlanningAgent):
         self._degrees: Dict[str, int] = {}
         self._cached_x: Optional[np.ndarray] = None
         self.problem = self._build_problem()
-        # on a Fleet, decide against each host's OWN capacity (vmapped
-        # per-host subproblems) instead of the aggregate relaxation
+        # on a Fleet, decide against each host's OWN capacity (one vmapped
+        # solve per layout bucket) instead of the aggregate relaxation
         self.fleet_problem: Optional[FleetSolverProblem] = None
-        if hasattr(platform, "hosts") and hasattr(platform, "host_of"):
-            self.fleet_problem = FleetSolverProblem(
-                self.problem,
-                {sid: platform.host_of(sid).host for sid in self.services},
-                {h.host: h.capacity[self.cfg.resource]
-                 for h in platform.hosts()})
+        self._build_fleet_problem()
+        self._sub_problems: Dict[tuple, SolverProblem] = {}  # placement oracle
+        self._subset_scores: Dict[tuple, float] = {}         # memoized scores
         self._models_loop: Dict[str, Dict[str, PolynomialModel]] = {}
         self._models_view: Optional[Dict[str, Dict[str, PolynomialModel]]] = None
         self.stacked: Optional[StackedModels] = None   # fused-path models
@@ -153,6 +150,18 @@ class RASKAgent(PlanningAgent):
         if self._models_view is None and self.stacked is not None:
             self._models_view = self.problem.models_dict(self.stacked)
         return self._models_view if self._models_view is not None else {}
+
+    def _build_fleet_problem(self) -> None:
+        """(Re)bind the per-host fleet solve to the platform's CURRENT
+        placement — called at construction and again after ``rebalance``
+        migrates services (the bucket layouts follow the topology)."""
+        platform = self.platform
+        if hasattr(platform, "hosts") and hasattr(platform, "host_of"):
+            self.fleet_problem = FleetSolverProblem(
+                self.problem,
+                {sid: platform.host_of(sid).host for sid in self.services},
+                {h.host: h.capacity[self.cfg.resource]
+                 for h in platform.hosts()})
 
     # -- problem construction -------------------------------------------------
     def _build_problem(self) -> SolverProblem:
@@ -297,9 +306,10 @@ class RASKAgent(PlanningAgent):
         return out[:d], out[d:2 * d], float(out[2 * d:].sum())
 
     def _fused_key(self) -> tuple:
+        fp = self.fleet_problem
         return (self._fit_plan_key, self.cfg.pgd_starts, self.cfg.pgd_iters,
                 self.cfg.pgd_lr, self.cfg.objective_impl,
-                self.fleet_problem is not None)
+                None if fp is None else fp.layout_key)
 
     def _fused_fn(self, key: tuple):
         return cached_fn(self._fused_fns, key, self._build_fused_fn)
@@ -328,12 +338,8 @@ class RASKAgent(PlanningAgent):
                                  capacity, n_services=len(problem.specs))
                 scores = jnp.reshape(score, (1,))
             else:
-                keys = jax.random.split(k_solve, len(fp.hosts))
-                A, scores = jax.vmap(
-                    partial(solve, n_services=fp.n_services_max))(
-                        fp.split(x0), keys, fp.tables, fp.gather_models(sm),
-                        rps[fp._svc_take], fp._caps)
-                a = fp.join(A)
+                # one vmapped solve per layout bucket, packed scatter back
+                a, scores = fp.solve_tracer(solve, x0, k_solve, sm, rps)
             # NOISE (Eq. 5): sigma = |a| * eta (the paper's worked example;
             # see _noise for why not the printed (a*eta)^2)
             noised = a + jax.random.normal(k_noise, a.shape) * jnp.abs(a) * eta
@@ -458,6 +464,119 @@ class RASKAgent(PlanningAgent):
                 self._degrees[sid] = best
             return self._degrees[sid]
         return self.cfg.delta
+
+    # -- marginal-fulfillment placement (ROADMAP: placement optimization) -------
+    def _subset_solve(self, idx: Tuple[int, ...], capacity: float,
+                      rps: np.ndarray, x0: np.ndarray) -> float:
+        """Best predicted weighted fulfillment of the services ``idx``
+        (global spec indices) alone under ``capacity`` — the brute-force
+        per-host oracle behind ``placement_scores``."""
+        if not idx:
+            return 0.0
+        # memoized on the full solve input: a rebalance pass re-scores the
+        # fleet after every move, but only the two touched hosts' subsets
+        # actually change — everything else is a cache hit
+        mkey = (idx, float(capacity), rps.tobytes(),
+                np.asarray(x0, np.float32).tobytes())
+        hit = self._subset_scores.get(mkey)
+        if hit is not None:
+            return hit
+        problem = self.problem
+        sub = cached_fn(self._sub_problems, idx,
+                        lambda: SolverProblem([problem.specs[i] for i in idx]),
+                        size=64)
+        models = self.models
+        sub_models = {problem.specs[i].name: models[problem.specs[i].name]
+                      for i in idx}
+        sub_x0 = np.concatenate(
+            [x0[problem.offsets[i]:problem.offsets[i]
+                + problem.specs[i].n_params] for i in idx])
+        _, score = sub.solve_pgd(
+            sub_models, rps[list(idx)], sub_x0, capacity,
+            n_starts=self.cfg.pgd_starts, iters=self.cfg.pgd_iters,
+            lr=self.cfg.pgd_lr, seed=0,
+            objective_impl=self.cfg.objective_impl)
+        if len(self._subset_scores) >= 512:
+            self._subset_scores.pop(next(iter(self._subset_scores)))
+        self._subset_scores[mkey] = float(score)
+        return float(score)
+
+    def placement_scores(self, obs: Optional[Mapping] = None
+                         ) -> Dict[str, Dict[str, float]]:
+        """Predicted marginal SLO fulfillment of every (service, host) pair.
+
+        For service s and host h: solve h's residents WITH s under h's own
+        budget, minus the solve WITHOUT s — the fulfillment the fleet gains
+        (or loses, when s squeezes the residents' shares) by hosting s on h.
+        Deterministic (fixed solver seed), so ``Fleet.rebalance`` fed these
+        scores is idempotent.  Returns {} off a Fleet or until every
+        relation has a fitted model (exploration phase).
+        """
+        if self.fleet_problem is None:
+            return {}
+        if not self._models_complete():
+            self._fit_models()
+        if not self._models_complete():
+            return {}
+        problem = self.problem
+        rps = self._rps_vector(obs)
+        x0 = self._cached_x if self._cached_x is not None else \
+            0.5 * (problem.lower + problem.upper)
+        sidx = {s.name: i for i, s in enumerate(problem.specs)}
+        hosts = {h.host: h for h in self.platform.hosts()}
+        caps = {name: h.capacity[self.cfg.resource]
+                for name, h in hosts.items()}
+        residents = {name: tuple(sorted(sidx[s] for s in h.services()
+                                        if s in sidx))
+                     for name, h in hosts.items()}
+        base = {name: self._subset_solve(residents[name], caps[name], rps, x0)
+                for name in hosts}
+        out: Dict[str, Dict[str, float]] = {}
+        for sid in self.services:
+            i = sidx[sid]
+            cur = self.platform.host_of(sid).host
+            row = {}
+            for name in hosts:
+                if name == cur:
+                    with_s = base[name]
+                    without = self._subset_solve(
+                        tuple(j for j in residents[name] if j != i),
+                        caps[name], rps, x0)
+                else:
+                    with_s = self._subset_solve(
+                        tuple(sorted(residents[name] + (i,))),
+                        caps[name], rps, x0)
+                    without = base[name]
+                row[name] = with_s - without
+            out[sid] = row
+        return out
+
+    def rebalance(self, obs: Optional[Mapping] = None,
+                  hysteresis: Optional[float] = None
+                  ) -> List[Tuple[str, str, str]]:
+        """Migrate services toward higher predicted marginal fulfillment,
+        one move per fresh score snapshot.
+
+        A move's gain (best host's score minus the current host's) is
+        exactly the predicted fleet-fulfillment delta of applying it, so
+        applying the single best move and re-scoring walks total
+        fulfillment strictly upward by more than the hysteresis gate per
+        move — the loop terminates, never ping-pongs a service, and a
+        second ``rebalance`` right after convergence is a no-op.  Rebinds
+        the bucketed fleet solve to the final topology.  Returns the
+        applied moves as (sid, from, to)."""
+        all_moves: List[Tuple[str, str, str]] = []
+        for _ in range(2 * max(len(self.services), 1)):   # safety cap
+            scores = self.placement_scores(obs)
+            if not scores:
+                break
+            moves = self.platform.rebalance(scores, hysteresis, limit=1)
+            if not moves:
+                break
+            all_moves.extend(moves)
+        if all_moves:
+            self._build_fleet_problem()   # bucket layouts follow placement
+        return all_moves
 
     # -- NOISE (Eq. 5) ------------------------------------------------------------
     def _eta_t(self) -> float:

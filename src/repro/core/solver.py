@@ -30,9 +30,12 @@ serve three callers:
 * ``SolverProblem`` — one problem, its own static tables;
 * ``SolverProblem.solve_many`` — ``vmap`` over B independent problems with
   the *same* layout and a per-problem capacity vector (one dispatch);
-* ``FleetSolverProblem`` — B per-host subproblems padded to a shared layout
-  (dims, relations, SLOs) and vmapped with per-host capacities, replacing
-  the aggregate-capacity relaxation a Fleet used to be solved against.
+* ``FleetSolverProblem`` — B per-host subproblems grouped into power-of-two
+  layout buckets (``bucket_key``), each bucket padded to its member maxima
+  (dims, relations, SLOs) and vmapped with per-host capacities in one jitted
+  dispatch, replacing both the aggregate-capacity relaxation a Fleet used to
+  be solved against and the single fleet-max padded layout that made a small
+  host's solve cost scale with the largest host.
 
 The seed's per-service loop objective survives as ``objective_loop`` (used
 by the parity tests and the e7 benchmark's pre-PR baseline); construct
@@ -52,7 +55,7 @@ import scipy.optimize
 
 from ..kernels import ops as kernel_ops
 from .regression import PolynomialModel, StackedModels, TRACE_COUNTS, \
-    stack_models
+    pad_capacity, stack_models
 from .slo import SLO
 
 COMPLETION = "completion"
@@ -553,49 +556,60 @@ class SolverProblem:
         return np.asarray(self._project(jnp.asarray(a), jnp.float32(capacity)))
 
 
-class FleetSolverProblem:
-    """Per-host capacity solve for a multi-device Fleet.
+def layout_bucket(n: int, minimum: int = 1) -> int:
+    """Power-of-two layout bucketing (``pad_capacity`` applied to host
+    layouts): the bucket a host falls into is a pure function of its OWN
+    service/relation counts — total (every count maps to a bucket) and
+    stable (independent of what else is in the fleet)."""
+    return pad_capacity(n, minimum=max(minimum, 1))
 
-    The global ``SolverProblem`` flattens all |S| services into one decision
-    vector and (on a Fleet) used to optimize against the *aggregate* capacity
-    relaxation, leaving per-host limits to apply-time clipping.  The fleet
-    objective is separable per service and the constraints are per host, so
-    the problem decomposes exactly into B independent per-host subproblems —
-    this class pads them (dims, relations, SLOs) to one shared layout and
-    ``vmap``s ``pgd_solve`` over the batch with a **per-host capacity
-    vector**: one dispatch decides for every host, and the resulting plans
-    are per-host feasible by construction (no capacity clips in the receipt).
+
+def bucket_key(n_services: int, n_relations: int) -> Tuple[int, int]:
+    """Bucket identity of a host layout: power-of-two service and relation
+    ceilings.  Hosts sharing a key share one padded layout (padded to the
+    member maximum), so a fleet mixing 2-service cameras with 8-service
+    gateways compiles two small programs instead of padding every host to
+    the fleet-wide maximum."""
+    return layout_bucket(n_services), layout_bucket(n_relations)
+
+
+class FleetBucket:
+    """One padded per-host layout shared by a group of like-sized hosts.
+
+    Holds the batched ``ProblemTables`` (leading axis = hosts in the bucket,
+    padded to the bucket's member maxima), the gather tables mapping the
+    global problem into host-local slots, and the inverse maps used to
+    scatter solved per-host vectors back into the global decision vector.
     """
 
-    def __init__(self, problem: SolverProblem, host_of: Mapping[str, str],
-                 capacities: Mapping[str, float]):
-        """``host_of``: service name (spec.name) -> host name;
-        ``capacities``: host name -> resource budget C_h."""
-        self.problem = problem
-        self.hosts: Tuple[str, ...] = tuple(sorted(
-            {host_of[s.name] for s in problem.specs}))
-        hidx = {h: b for b, h in enumerate(self.hosts)}
+    def __init__(self, problem: SolverProblem, hosts: Sequence[str],
+                 host_idx: Sequence[int], svc_of_host: Sequence[Sequence[int]],
+                 capacities: Sequence[float]):
+        self.hosts: Tuple[str, ...] = tuple(hosts)
+        self.host_idx = np.asarray(host_idx, np.int64)  # rows in fleet order
         B = len(self.hosts)
-        self.capacities = np.asarray([capacities[h] for h in self.hosts],
-                                     np.float32)
-
-        svc_of_host: List[List[int]] = [[] for _ in range(B)]
-        for i, s in enumerate(problem.specs):
-            svc_of_host[hidx[host_of[s.name]]].append(i)
+        self.capacities = np.asarray(capacities, np.float32)
         self.n_services_max = max(len(v) for v in svc_of_host)
+        self.key = bucket_key(
+            self.n_services_max,
+            max(sum(len(problem.specs[i].relation_features) for i in svcs)
+                for svcs in svc_of_host))
 
         # decision-vector layout: host-local slots <-> global indices
         dims = [sum(problem.specs[i].n_params for i in svcs)
                 for svcs in svc_of_host]
         d_max = max(dims)
+        self.dim = int(sum(dims))          # real (unpadded) params covered
         param_take = np.zeros((B, d_max), np.int64)
         lower = np.zeros((B, d_max), np.float32)
         upper = np.zeros((B, d_max), np.float32)   # padded slots pin to 0
         mask = np.zeros((B, d_max), bool)
-        inv_b = np.zeros(problem.dim, np.int64)
-        inv_d = np.zeros(problem.dim, np.int64)
+        g_idx = np.zeros(self.dim, np.int64)       # global param indices
+        loc_b = np.zeros(self.dim, np.int64)       # -> bucket row
+        loc_d = np.zeros(self.dim, np.int64)       # -> local slot
         g2slot = np.zeros(problem.dim, np.int64)
         svc_local = np.zeros(len(problem.specs), np.int64)
+        k = 0
         for b, svcs in enumerate(svc_of_host):
             d = 0
             for si, i in enumerate(svcs):
@@ -606,13 +620,17 @@ class FleetSolverProblem:
                     lower[b, d] = problem.lower[g]
                     upper[b, d] = problem.upper[g]
                     mask[b, d] = problem.resource_mask[g]
-                    inv_b[g], inv_d[g], g2slot[g] = b, d, d
+                    g_idx[k], loc_b[k], loc_d[k] = g, b, d
+                    g2slot[g] = d
+                    k += 1
                     d += 1
 
         # relations: per-host rows gathered out of the global stack
         rel_of_host: List[List[int]] = [[] for _ in range(B)]
+        svc_to_b = {i: b for b, svcs in enumerate(svc_of_host) for i in svcs}
         for r, (i, *_rest) in enumerate(problem.relations):
-            rel_of_host[hidx[host_of[problem.specs[i].name]]].append(r)
+            if i in svc_to_b:
+                rel_of_host[svc_to_b[i]].append(r)
         r_max = max(max((len(v) for v in rel_of_host), default=1), 1)
         f_max = problem._rel_gather.shape[1]
         rel_take = np.zeros((B, r_max), np.int64)
@@ -629,7 +647,8 @@ class FleetSolverProblem:
         # SLOs: per-host subset of the global phi table, weight-0 padding
         slo_of_host: List[List[int]] = [[] for _ in range(B)]
         for q, i in enumerate(problem._slo_service):
-            slo_of_host[hidx[host_of[problem.specs[int(i)].name]]].append(q)
+            if int(i) in svc_to_b:
+                slo_of_host[svc_to_b[int(i)]].append(q)
         q_max = max(max((len(v) for v in slo_of_host), default=1), 1)
         kind = np.zeros((B, q_max), np.int32)
         svc = np.zeros((B, q_max), np.int32)
@@ -647,10 +666,10 @@ class FleetSolverProblem:
                 ridx[b, ql] = rel_local[problem._slo_ridx[q]]
 
         # per-problem rps gather: host-local service slot -> global service
-        svc_take = np.zeros((B, self.n_services_max), np.int64)
+        svc_take_np = np.zeros((B, self.n_services_max), np.int64)
         for b, svcs in enumerate(svc_of_host):
             for si, i in enumerate(svcs):
-                svc_take[b, si] = i
+                svc_take_np[b, si] = i
 
         self.tables = ProblemTables(
             lower=jnp.asarray(lower), upper=jnp.asarray(upper),
@@ -659,59 +678,157 @@ class FleetSolverProblem:
             slo_kind=jnp.asarray(kind), slo_service=jnp.asarray(svc),
             slo_weight=jnp.asarray(weight), slo_target=jnp.asarray(target),
             slo_pidx=jnp.asarray(pidx), slo_ridx=jnp.asarray(ridx))
-        self._param_take = jnp.asarray(param_take)
-        self._rel_take = jnp.asarray(rel_take)
-        self._rel_valid = jnp.asarray(rel_valid)
-        self._svc_take = jnp.asarray(svc_take)
-        self._inv_b = jnp.asarray(inv_b)
-        self._inv_d = jnp.asarray(inv_d)
-        self._caps = jnp.asarray(self.capacities)
-        self._runs: Dict[tuple, callable] = {}
-        self._project_many = jax.jit(self._project_global)
+        self.param_take = jnp.asarray(param_take)
+        self.rel_take = jnp.asarray(rel_take)
+        self.rel_valid = jnp.asarray(rel_valid)
+        self.svc_take = jnp.asarray(svc_take_np)
+        self.g_idx = g_idx
+        self.loc_b = jnp.asarray(loc_b)
+        self.loc_d = jnp.asarray(loc_d)
+        self.caps = jnp.asarray(self.capacities)
 
     # -- device-side building blocks ------------------------------------------
     def gather_models(self, sm: StackedModels) -> StackedModels:
         """Per-host batched view (leaves (B, R_max, ...)) of the global
         stacked models — device gathers, no host sync; padded relation rows
         are masked out entirely."""
-        take = self._rel_take
+        take = self.rel_take
         return StackedModels(
             sm.w[take], sm.exponents[take],
-            sm.term_mask[take] * self._rel_valid[:, :, None],
+            sm.term_mask[take] * self.rel_valid[:, :, None],
             sm.x_scale[take], sm.max_degree, ())
 
     def split(self, a):
-        """Global decision vector (dim,) -> per-host padded (B, D_max)."""
-        return jnp.clip(a[self._param_take], self.tables.lower,
+        """Global decision vector (dim,) -> this bucket's padded (B, D_max)."""
+        return jnp.clip(a[self.param_take], self.tables.lower,
                         self.tables.upper)
 
-    def join(self, A):
-        """Per-host padded (B, D_max) -> global decision vector (dim,)."""
-        return A[self._inv_b, self._inv_d]
+    def gather_back(self, A):
+        """Padded per-host solutions (B, D_max) -> the bucket's real params
+        (dim_bucket,), ordered by ascending global index ``g_idx``."""
+        return A[self.loc_b, self.loc_d]
+
+
+class FleetSolverProblem:
+    """Per-host capacity solve for a multi-device Fleet, bucketed by layout.
+
+    The global ``SolverProblem`` flattens all |S| services into one decision
+    vector and (on a Fleet) used to optimize against the *aggregate* capacity
+    relaxation, leaving per-host limits to apply-time clipping.  The fleet
+    objective is separable per service and the constraints are per host, so
+    the problem decomposes exactly into B independent per-host subproblems.
+
+    Padding every subproblem to ONE shared layout (the pre-bucketing
+    behavior, kept as ``bucketed=False``) makes the fleet solve cost scale
+    with the *largest* host: a 2-vCPU camera node padded to a 16-core
+    gateway's layout burns most of its FLOPs on padding.  Instead, hosts are
+    grouped into **layout buckets** (power-of-two service/relation ceilings,
+    ``bucket_key`` — the ``BatchedFitPlan`` row-bucketing idiom applied to
+    host layouts) and each bucket is padded only to its member maxima; one
+    jitted dispatch runs one vmapped ``pgd_solve`` per bucket with that
+    bucket's **per-host capacity vector** and scatters the solved vectors
+    back into the global plan (a precomputed permutation — ``join``).  On a
+    homogeneous fleet there is exactly one bucket whose padded layout equals
+    the old shared layout, so the bucketed path reproduces it byte-for-byte.
+    Plans are per-host feasible by construction (no capacity clips in the
+    receipt).
+    """
+
+    def __init__(self, problem: SolverProblem, host_of: Mapping[str, str],
+                 capacities: Mapping[str, float], bucketed: bool = True):
+        """``host_of``: service name (spec.name) -> host name;
+        ``capacities``: host name -> resource budget C_h;
+        ``bucketed=False`` forces the single-shared-layout path (every host
+        padded to the fleet maximum) — the e6 baseline and parity oracle."""
+        self.problem = problem
+        self.bucketed = bucketed
+        self.hosts: Tuple[str, ...] = tuple(sorted(
+            {host_of[s.name] for s in problem.specs}))
+        hidx = {h: b for b, h in enumerate(self.hosts)}
+        self.capacities = np.asarray([capacities[h] for h in self.hosts],
+                                     np.float32)
+
+        svc_of_host: List[List[int]] = [[] for _ in self.hosts]
+        for i, s in enumerate(problem.specs):
+            svc_of_host[hidx[host_of[s.name]]].append(i)
+        self.n_services_max = max(len(v) for v in svc_of_host)
+
+        # bucket assignment: a pure function of each host's own layout
+        self.bucket_of: Dict[str, Tuple[int, int]] = {
+            h: bucket_key(len(svcs),
+                          sum(len(problem.specs[i].relation_features)
+                              for i in svcs))
+            for h, svcs in zip(self.hosts, svc_of_host)}
+        if bucketed:
+            groups: Dict[Tuple[int, int], List[int]] = {}
+            for b, h in enumerate(self.hosts):
+                groups.setdefault(self.bucket_of[h], []).append(b)
+            keys = sorted(groups)          # deterministic bucket order
+        else:
+            groups = {(0, 0): list(range(len(self.hosts)))}
+            keys = [(0, 0)]
+        self.buckets: List[FleetBucket] = [
+            FleetBucket(problem, [self.hosts[b] for b in groups[k]],
+                        groups[k], [svc_of_host[b] for b in groups[k]],
+                        self.capacities[groups[k]])
+            for k in keys]
+
+        # topology fingerprint: callers caching compiled pipelines key on
+        # this, so a rebalance-migrated fleet never reuses a stale trace
+        self.layout_key: tuple = (bucketed, tuple(
+            (h, tuple(svc_of_host[b])) for b, h in enumerate(self.hosts)))
+
+        # scatter permutations: concat of per-bucket outputs -> global order
+        self._join_perm = jnp.asarray(np.argsort(np.concatenate(
+            [bk.g_idx for bk in self.buckets]), kind="stable"))
+        self._score_perm = jnp.asarray(np.argsort(np.concatenate(
+            [bk.host_idx for bk in self.buckets]), kind="stable"))
+        self._runs: Dict[tuple, callable] = {}
+        self._seq_fns: Dict[tuple, callable] = {}
+        self._project_many = jax.jit(self._project_global)
+
+    def join(self, parts):
+        """Per-bucket real-param vectors (in ``buckets`` order) -> global
+        decision vector (dim,) via the precomputed permutation."""
+        return jnp.concatenate(parts)[self._join_perm]
 
     def _project_global(self, a):
-        proj = jax.vmap(project_capacity)(
-            self.split(a), self.tables.lower, self.tables.upper,
-            self.tables.resource_mask, self._caps * (1.0 - _CAP_MARGIN))
-        return self.join(proj)
+        parts = []
+        for bk in self.buckets:
+            proj = jax.vmap(project_capacity)(
+                bk.split(a), bk.tables.lower, bk.tables.upper,
+                bk.tables.resource_mask, bk.caps * (1.0 - _CAP_MARGIN))
+            parts.append(bk.gather_back(proj))
+        return self.join(parts)
 
     # -- the fleet solve -------------------------------------------------------
+    def solve_tracer(self, solve, x0g, key, sm, rps):
+        """Trace-context fleet solve (composable into larger jitted
+        pipelines, e.g. RASK's fused decide): one vmapped ``solve`` per
+        bucket, packed scatter back.  ``solve`` is ``pgd_solve`` with every
+        static argument except ``n_services`` bound; returns the global
+        assignment (dim,) and per-host scores (B,) in fleet host order."""
+        keys = jax.random.split(key, len(self.hosts))
+        parts, scores = [], []
+        for bk in self.buckets:
+            A, sc = jax.vmap(partial(solve, n_services=bk.n_services_max))(
+                bk.split(x0g), keys[bk.host_idx], bk.tables,
+                bk.gather_models(sm), rps[bk.svc_take], bk.caps)
+            parts.append(bk.gather_back(A))
+            scores.append(sc)
+        return self.join(parts), jnp.concatenate(scores)[self._score_perm]
+
     def _run(self, n_starts: int, iters: int, lr: float, objective_impl: str,
              interpret: bool):
         key = (n_starts, iters, lr, objective_impl, interpret)
 
         def build():
-            core = jax.vmap(
-                partial(pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
-                        n_services=self.n_services_max,
-                        objective_impl=objective_impl, interpret=interpret))
+            solve = partial(pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
+                            objective_impl=objective_impl,
+                            interpret=interpret)
 
-            def run(x0g, key, sm, rps_g, caps):
-                smb = self.gather_models(sm)
-                keys = jax.random.split(key, len(self.hosts))
-                A, scores = core(self.split(x0g), keys, self.tables, smb,
-                                 rps_g[self._svc_take], caps)
-                return self.join(A), scores
+            def run(x0g, key, sm, rps_g):
+                return self.solve_tracer(solve, x0g, key, sm, rps_g)
 
             return jax.jit(run)
 
@@ -721,16 +838,57 @@ class FleetSolverProblem:
                    iters: int = 32, lr: float = 0.18, seed: int = 0,
                    objective_impl: str = "reference",
                    interpret: bool = False) -> Tuple[np.ndarray, np.ndarray]:
-        """One vmapped dispatch deciding every host's services against its
-        OWN capacity.  ``rps`` (|S|,) and ``x0`` (dim,) are in the global
-        problem's order; returns (global assignment (dim,), per-host scores
-        (B,))."""
+        """One jitted dispatch deciding every host's services against its
+        OWN capacity (one vmapped solve per layout bucket).  ``rps`` (|S|,)
+        and ``x0`` (dim,) are in the global problem's order; returns (global
+        assignment (dim,), per-host scores (B,) in ``hosts`` order)."""
         sm = self.problem.stack(models)
         fn = self._run(n_starts, iters, lr, objective_impl, interpret)
         a, scores = fn(jnp.asarray(x0, jnp.float32),
                        jax.random.PRNGKey(seed), sm,
-                       jnp.asarray(rps, jnp.float32), self._caps)
+                       jnp.asarray(rps, jnp.float32))
         return np.asarray(a), np.asarray(scores)
+
+    def solve_sequential(self, models: Models, rps, x0, *, n_starts: int = 6,
+                         iters: int = 32, lr: float = 0.18, seed: int = 0,
+                         objective_impl: str = "reference",
+                         interpret: bool = False
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """The Python-loop reference: each host's padded subproblem solved
+        with its own ``pgd_solve`` dispatch (same tables, same per-host PRNG
+        keys as the batched path) — the parity oracle ``solve_many`` must
+        match numerically, and the sequential baseline the e6 hetero
+        benchmark times the bucketed dispatch against."""
+        sm = self.problem.stack(models)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.hosts))
+        x0g = jnp.asarray(x0, jnp.float32)
+        rps = jnp.asarray(rps, jnp.float32)
+        parts, scores = [], []
+        for bi, bk in enumerate(self.buckets):
+            fn = cached_fn(
+                self._seq_fns,
+                (bi, n_starts, iters, lr, objective_impl, interpret),
+                lambda: jax.jit(partial(
+                    pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
+                    n_services=self.buckets[bi].n_services_max,
+                    objective_impl=objective_impl, interpret=interpret)),
+                size=max(_PGD_CACHE_SIZE, 2 * len(self.buckets)))
+            X0 = bk.split(x0g)
+            smb = bk.gather_models(sm)
+            rpsb = rps[bk.svc_take]
+            A, sc = [], []
+            for j in range(len(bk.hosts)):
+                row = jax.tree_util.tree_map(lambda x: x[j], bk.tables)
+                a_j, s_j = fn(X0[j], keys[int(bk.host_idx[j])], row,
+                              jax.tree_util.tree_map(lambda x: x[j], smb),
+                              rpsb[j], bk.caps[j])
+                A.append(a_j)
+                sc.append(s_j)
+            parts.append(bk.gather_back(jnp.stack(A)))
+            scores.append(jnp.stack(sc))
+        a = self.join(parts)
+        return np.asarray(a), \
+            np.asarray(jnp.concatenate(scores)[self._score_perm])
 
     # -- Eq. (3) under per-host constraints -----------------------------------
     def random_assignment(self, rng: np.random.Generator) -> np.ndarray:

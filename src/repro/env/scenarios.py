@@ -1,0 +1,106 @@
+"""Heterogeneous fleet scenarios — unequal devices under one control plane.
+
+The paper's E6 replicates the QR/CV/PC triple on ONE device with
+proportionally grown capacity; real edge fleets are not like that.  A
+camera node has 2 vCPUs, an aggregation hub a handful, a gateway a big
+multiple (DYVERSE's heterogeneous-edge setting, arXiv:1810.04608) — and the
+services they run see different load shapes at the same time.  This module
+packages that world for ``EdgeEnvironment``:
+
+* ``HostSpec`` — a named device with its OWN resource budget;
+* ``tiered_hosts`` — the camera / hub / gateway preset (2 / 6 / 16 cores);
+* ``two_tier_hosts`` — one small + one large device, sized so
+  capacity-weighted placement yields hosts of 2 and 8 services — the
+  minimal fleet that exercises TWO solver layout buckets;
+* ``mixed_patterns`` — per-service-type diurnal / bursty / constant load
+  (the paper's Fig. 7 traces, but *different shapes at once*);
+* ``hetero_environment`` / ``two_tier_environment`` — wired scenarios: the
+  environment, the structural knowledge for a RASK agent, and the services
+  spread over the unequal devices proportionally to their budgets.
+
+Everything is seed-deterministic so scenario regression tests and the e6
+``--hetero`` benchmark can assert on exact trajectories.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+from .profiles import CV_PROFILE, PC_PROFILE, QR_PROFILE, ServiceProfile, \
+    paper_profiles
+from .simulator import EdgeEnvironment
+from .workloads import Pattern, bursty, constant, diurnal
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    """One edge device: a name and its own resource budget."""
+
+    name: str
+    capacity: Mapping[str, float]
+
+
+def tiered_hosts(resource: str = "cores", small: float = 2.0,
+                 mid: float = 6.0, large: float = 16.0) -> List[HostSpec]:
+    """Camera / hub / gateway — three capacity tiers on one resource."""
+    return [HostSpec("camera-0", {resource: small}),
+            HostSpec("hub-0", {resource: mid}),
+            HostSpec("gateway-0", {resource: large})]
+
+
+def two_tier_hosts(resource: str = "cores", small: float = 4.0,
+                   large: float = 16.0) -> List[HostSpec]:
+    """One small + one large device (1:4 budget ratio): with 10 services
+    under capacity placement the small host takes 2 and the large 8 —
+    two solver layout buckets, the e6 ``--hetero`` acceptance fleet."""
+    return [HostSpec("edge-small", {resource: small}),
+            HostSpec("edge-big", {resource: large})]
+
+
+def mixed_patterns(duration_s: float = 1800.0, seed: int = 0
+                   ) -> Dict[str, Pattern]:
+    """Mixed load shapes hitting the fleet at once: QR rides the diurnal
+    curve, CV gets the bursts, PC streams at a constant rate (Fig. 7
+    levels: QR to 100 RPS, CV to 10, PC at 50)."""
+    return {"qr-detector": diurnal(100.0, duration_s=duration_s, seed=seed),
+            "cv-analyzer": bursty(10.0, duration_s=duration_s,
+                                  seed=seed + 100),
+            "pc-visualizer": constant(50.0)}
+
+
+def hetero_knowledge(profiles: Sequence[ServiceProfile]
+                     ) -> Dict[str, Dict[str, Tuple[str, ...]]]:
+    """Structural knowledge K for any profile mix (deduped by type)."""
+    return {p.type: {t: tuple(f) for t, f in p.knowledge.items()}
+            for p in profiles}
+
+
+def hetero_environment(replicas: int = 3, duration_s: float = 1800.0,
+                       seed: int = 0,
+                       hosts: Sequence[HostSpec] = None
+                       ) -> Tuple[EdgeEnvironment, Dict]:
+    """The 9-services / 3-unequal-devices scenario: ``replicas`` copies of
+    the paper triple spread over camera/hub/gateway proportionally to each
+    device's budget, under mixed diurnal/bursty/constant load.  Returns
+    (environment, knowledge-for-RASK)."""
+    profiles = list(paper_profiles().values())
+    hosts = list(hosts) if hosts is not None else tiered_hosts()
+    env = EdgeEnvironment(profiles,
+                          patterns=mixed_patterns(duration_s, seed=seed),
+                          replicas=replicas, seed=seed, hosts=hosts,
+                          placement="capacity")
+    return env, hetero_knowledge(profiles)
+
+
+def two_tier_environment(duration_s: float = 1800.0, seed: int = 0
+                         ) -> Tuple[EdgeEnvironment, Dict]:
+    """10 services on a 2-bucket fleet (2 on the small host, 8 on the big
+    one): five profile slots (QR, CV, PC plus a second QR and CV) times two
+    replicas, capacity-placed over ``two_tier_hosts``.  Returns
+    (environment, knowledge-for-RASK)."""
+    profiles = [QR_PROFILE, CV_PROFILE, PC_PROFILE, QR_PROFILE, CV_PROFILE]
+    env = EdgeEnvironment(profiles,
+                          patterns=mixed_patterns(duration_s, seed=seed),
+                          replicas=2, seed=seed, hosts=two_tier_hosts(),
+                          placement="capacity")
+    return env, hetero_knowledge(profiles)

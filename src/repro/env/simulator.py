@@ -293,51 +293,86 @@ class EdgeEnvironment:
 
     With ``hosts == 1`` the platform is a single ``MUDAP``; with
     ``hosts > 1`` it is a ``Fleet`` of per-device MUDAPs (each with its own
-    ``capacity``) and containers are placed round-robin across devices —
-    the E6-style 9-services-on-3-devices scenario is
+    ``capacity``) — the E6-style 9-services-on-3-devices scenario is
     ``EdgeEnvironment(profiles, {"cores": 8.0}, replicas=3, hosts=3)``.
+
+    ``hosts`` may instead be a sequence of host specs — anything with
+    ``.name`` and ``.capacity`` (see ``env.scenarios.HostSpec``) or plain
+    ``(name, capacity)`` pairs — giving every device its OWN budget: the
+    heterogeneous fleets the bucketed per-host solver exists for.
+    ``placement`` then chooses how containers spread over the devices:
+    ``"round_robin"`` (the homogeneous default), ``"capacity"``
+    (proportional to each device's resource budget, largest-remainder
+    apportionment — a 16-core gateway takes 8x the services of a 2-core
+    camera node), or an explicit per-container host-name list.
     """
 
     def __init__(self, profiles: Sequence[ServiceProfile],
-                 capacity: Mapping[str, float],
+                 capacity: Optional[Mapping[str, float]] = None,
                  patterns: Optional[Mapping[str, Pattern]] = None,
                  replicas: int = 1, host: str = "edge-0", seed: int = 0,
-                 hosts: int = 1):
+                 hosts: Union[int, Sequence] = 1,
+                 placement: Union[str, Sequence[str]] = "round_robin"):
         """``replicas`` spawns N independent containers per profile (E6)."""
         self.platform: Union[MUDAP, Fleet]
-        if hosts <= 1:
-            hostnames = [host]
-            self.platform = MUDAP(capacity, host=host)
+        if isinstance(hosts, int):
+            if capacity is None:
+                raise ValueError("an integer `hosts` needs `capacity` "
+                                 "(the per-device budget)")
+            if hosts <= 1:
+                specs = [(host, dict(capacity))]
+            else:
+                if host != "edge-0":
+                    raise ValueError(
+                        "hosts > 1 generates edge-0..edge-N-1 device names; "
+                        "a custom `host` name cannot be honored")
+                specs = [(f"edge-{i}", dict(capacity)) for i in range(hosts)]
         else:
+            if capacity is not None:
+                raise ValueError(
+                    "per-host budgets come from the host specs; `capacity` "
+                    "must be omitted when `hosts` is a sequence")
             if host != "edge-0":
                 raise ValueError(
-                    "hosts > 1 generates edge-0..edge-N-1 device names; "
-                    "a custom `host` name cannot be honored")
-            hostnames = [f"edge-{i}" for i in range(hosts)]
-            self.platform = Fleet([MUDAP(capacity, host=h)
-                                   for h in hostnames])
+                    "host specs carry their own names; a custom `host` "
+                    "cannot be honored when `hosts` is a sequence")
+            specs = [(str(h.name), dict(h.capacity))
+                     if hasattr(h, "capacity") else (str(h[0]), dict(h[1]))
+                     for h in hosts]
+            if not specs:
+                raise ValueError("`hosts` sequence is empty")
+        hostnames = [n for n, _ in specs]
+        self.host_capacity: Dict[str, Dict[str, float]] = dict(specs)
+        if len(specs) == 1:
+            self.platform = MUDAP(specs[0][1], host=specs[0][0])
+        else:
+            self.platform = Fleet([MUDAP(c, host=n) for n, c in specs])
         self.pool = ContainerPool()
         self.services: Dict[str, SimulatedService] = {}
         self.patterns: Dict[str, Pattern] = {}
         rng = np.random.default_rng(seed)
         n_total = len(profiles) * replicas
-        # containers are placed round-robin; each starts with an equal share
-        # of its *device's* resources (§V-B(c))
+        assign = self._placements(placement, hostnames, n_total)
+        # each container starts with an equal share of its *device's*
+        # resources (§V-B(c))
         per_host = {h: 0 for h in hostnames}
-        for i in range(n_total):
-            per_host[hostnames[i % len(hostnames)]] += 1
+        for h in assign:
+            per_host[h] += 1
         i = 0
+        instance_of: Dict[str, int] = {}   # per-type container numbering
         for profile in profiles:
-            for r in range(replicas):
-                hostname = hostnames[i % len(hostnames)]
+            for _r in range(replicas):
+                hostname = assign[i]
                 i += 1
-                sid = ServiceId(hostname, profile.type, f"c{r}")
+                c = instance_of.get(profile.type, 0)
+                instance_of[profile.type] = c + 1
+                sid = ServiceId(hostname, profile.type, f"c{c}")
                 key = str(sid)
                 backend = SimulatedService(
                     profile, np.random.default_rng(rng.integers(2 ** 31)),
                     pool=self.pool)
                 defaults = dict(profile.defaults)
-                for res, cap in capacity.items():
+                for res, cap in self.host_capacity[hostname].items():
                     if res in profile.api.names:
                         defaults[res] = cap / per_host[hostname]
                 if isinstance(self.platform, Fleet):
@@ -351,6 +386,40 @@ class EdgeEnvironment:
                 pat = (patterns or {}).get(profile.type)
                 self.patterns[key] = pat if pat else constant(profile.default_rps)
         self.t = 0.0
+
+    def _placements(self, placement, hostnames: List[str],
+                    n_total: int) -> List[str]:
+        """Per-container host assignment under the chosen policy."""
+        if not isinstance(placement, str):
+            assign = [str(h) for h in placement]
+            if len(assign) != n_total:
+                raise ValueError(f"explicit placement names {len(assign)} "
+                                 f"hosts for {n_total} containers")
+            unknown = set(assign) - set(hostnames)
+            if unknown:
+                raise KeyError(f"unknown hosts in placement: {sorted(unknown)}")
+            return assign
+        if placement == "round_robin":
+            return [hostnames[i % len(hostnames)] for i in range(n_total)]
+        if placement == "capacity":
+            # largest-remainder apportionment on total budget, then hand
+            # containers out by largest remaining quota (ties: host order)
+            w = np.asarray([max(sum(self.host_capacity[h].values()), 0.0)
+                            for h in hostnames], float)
+            w = w / max(w.sum(), 1e-9)
+            quota = w * n_total
+            counts = np.floor(quota).astype(int)
+            frac_order = np.argsort(-(quota - counts), kind="stable")
+            for j in frac_order[:n_total - int(counts.sum())]:
+                counts[j] += 1
+            remaining = counts.astype(float)
+            assign = []
+            for _ in range(n_total):
+                j = int(np.argmax(remaining))   # ties: first host wins
+                assign.append(hostnames[j])
+                remaining[j] -= 1.0
+            return assign
+        raise ValueError(f"unknown placement policy {placement!r}")
 
     # -- measured Eq. (8) ------------------------------------------------------
     def measured_fulfillment(self, window: float = 5.0

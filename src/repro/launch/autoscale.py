@@ -11,9 +11,13 @@ QR/CV/PC triple.
 With ``--hosts N`` the pod budget is split over N devices behind a ``Fleet``
 (``--replicas`` multiplies the service count), so e.g.
 ``--hosts 3 --replicas 3`` runs 9 services across 3 devices under one agent.
+``--host-caps 4,8,20`` instead gives every device its OWN chip budget — a
+heterogeneous fleet: services are placed proportionally to each device's
+budget and the solver groups the unequal hosts into layout buckets.
 
     PYTHONPATH=src python -m repro.launch.autoscale --minutes 10
     PYTHONPATH=src python -m repro.launch.autoscale --hosts 3 --replicas 3
+    PYTHONPATH=src python -m repro.launch.autoscale --host-caps 4,8,20 --replicas 3
 """
 from __future__ import annotations
 
@@ -53,21 +57,39 @@ def main(argv=None):
     ap.add_argument("--backend", default="pgd", choices=["pgd", "slsqp"])
     ap.add_argument("--hosts", type=int, default=1,
                     help="edge devices behind one Fleet (chips split evenly)")
+    ap.add_argument("--host-caps", default=None,
+                    help="comma-separated per-device chip budgets (e.g. "
+                         "'4,8,20'): a HETEROGENEOUS fleet, services placed "
+                         "proportionally to each device's budget; overrides "
+                         "--hosts/--chips splitting")
     ap.add_argument("--replicas", type=int, default=1,
                     help="containers per LM service type")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    profiles = lm_services(args.chips)
+    if args.host_caps:
+        caps = [float(c) for c in args.host_caps.split(",")]
+        total_chips = sum(caps)
+    else:
+        total_chips = args.chips
+    profiles = lm_services(total_chips)
     duration = args.minutes * 60.0
     pat = diurnal if args.pattern == "diurnal" else bursty
     patterns = {p.type: pat(p.default_rps * 2.5, duration_s=duration,
                             seed=args.seed + i)
                 for i, p in enumerate(profiles)}
-    per_host_chips = args.chips / max(args.hosts, 1)
-    env = EdgeEnvironment(profiles, {"chips": per_host_chips},
-                          patterns=patterns, seed=args.seed,
-                          replicas=args.replicas, hosts=args.hosts)
+    if args.host_caps:
+        # heterogeneous fleet: every device its own budget, services placed
+        # proportionally to it (the bucketed per-host solver's home turf)
+        hosts = [(f"edge-{i}", {"chips": c}) for i, c in enumerate(caps)]
+        env = EdgeEnvironment(profiles, patterns=patterns, seed=args.seed,
+                              replicas=args.replicas, hosts=hosts,
+                              placement="capacity")
+    else:
+        per_host_chips = args.chips / max(args.hosts, 1)
+        env = EdgeEnvironment(profiles, {"chips": per_host_chips},
+                              patterns=patterns, seed=args.seed,
+                              replicas=args.replicas, hosts=args.hosts)
     knowledge = {p.type: dict(p.knowledge) for p in profiles}
     agent = RASKAgent(env.platform, knowledge,
                       RaskConfig(xi=20, eta=0.0, backend=args.backend,
@@ -78,7 +100,9 @@ def main(argv=None):
     capacity_clips = sum(
         1 for h in hist if h.receipt
         for o in h.receipt.clipped() if o.reason == "capacity")
-    print(f"services={len(env.platform.services())} hosts={args.hosts} "
+    n_hosts = len(env.platform.hosts()) \
+        if hasattr(env.platform, "hosts") else 1
+    print(f"services={len(env.platform.services())} hosts={n_hosts} "
           f"cycles={len(hist)} mean fulfillment (post-explore)="
           f"{np.mean(post):.3f} violations={violation_rate(post):.2%} "
           f"capacity clips={capacity_clips} mean agent runtime="

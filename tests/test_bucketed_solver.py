@@ -1,0 +1,143 @@
+"""Property tests (hypothesis) for the bucketed fleet solve.
+
+ISSUE 4 satellite gates: bucket assignment is total and stable (a pure
+function of each host's OWN layout, regardless of fleet composition); the
+bucketed packed->unpacked plan pipeline is byte-identical to the unbucketed
+single-shared-layout path on homogeneous fleets; and every solved plan
+respects its host's own capacity (no apply-time clips needed).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: skip module if absent
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regression import fit_polynomial
+from repro.core.slo import SLO
+from repro.core.solver import FleetSolverProblem, ServiceSpec, \
+    SolverProblem, bucket_key, layout_bucket
+
+
+def _specs(n):
+    return [ServiceSpec(
+        name=f"s{i}", param_names=("cores", "quality"),
+        lower=(0.1, 100.0), upper=(8.0, 1000.0),
+        resource_mask=(True, False),
+        slos=(SLO("quality", 800.0, 0.5), SLO("completion", 1.0, 1.0)),
+        relation_features=(("tp_max", (0, 1)),)) for i in range(n)]
+
+
+_MODEL = None
+
+
+def _models(problem):
+    global _MODEL
+    if _MODEL is None:
+        rng = np.random.default_rng(0)
+        X = np.c_[rng.uniform(0.1, 8, 200), rng.uniform(100, 1000, 200)]
+        Y = 20 * X[:, 0] - X[:, 1] / 100.0
+        _MODEL = fit_polynomial(X.astype(np.float32), Y.astype(np.float32),
+                                2, x_scale=[8.0, 1000.0])
+    return {s.name: {"tp_max": _MODEL} for s in problem.specs}
+
+
+def _fleet(svc_counts, caps=None):
+    """Build a fleet problem with the given per-host service counts."""
+    n = sum(svc_counts)
+    problem = SolverProblem(_specs(n))
+    host_of, i = {}, 0
+    for h, c in enumerate(svc_counts):
+        for _ in range(c):
+            host_of[f"s{i}"] = f"h{h}"
+            i += 1
+    caps = caps if caps is not None else [4.0 + 2.0 * h
+                                          for h in range(len(svc_counts))]
+    return problem, host_of, {f"h{h}": float(c)
+                              for h, c in zip(range(len(svc_counts)), caps)}
+
+
+# -- bucket assignment: total and stable -------------------------------------
+
+@given(st.integers(0, 2000), st.integers(0, 2000))
+def test_layout_bucket_total_and_pow2(n_services, n_relations):
+    """Every layout maps to a bucket; ceilings are powers of two >= count."""
+    ks, kr = bucket_key(n_services, n_relations)
+    assert (ks, kr) == (layout_bucket(n_services), layout_bucket(n_relations))
+    for k, n in ((ks, n_services), (kr, n_relations)):
+        assert k >= max(n, 1)
+        assert k & (k - 1) == 0                       # power of two
+        assert k == 1 or k < 2 * max(n, 1)            # tightest ceiling
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 9), min_size=1, max_size=5))
+def test_bucket_assignment_total_and_stable(svc_counts):
+    """Every host lands in exactly one bucket, keyed only by its OWN layout
+    — adding unrelated hosts to the fleet never re-buckets it."""
+    problem, host_of, caps = _fleet(svc_counts)
+    fp = FleetSolverProblem(problem, host_of, caps)
+    # total: every host is assigned, and appears in exactly one bucket
+    assert set(fp.bucket_of) == set(fp.hosts)
+    seen = [h for bk in fp.buckets for h in bk.hosts]
+    assert sorted(seen) == sorted(fp.hosts)
+    for h in fp.hosts:
+        n_svc = sum(1 for s, hh in host_of.items() if hh == h)
+        # one relation per service in this layout
+        assert fp.bucket_of[h] == bucket_key(n_svc, n_svc)
+    # stable: the same host layout in a BIGGER fleet keeps its key
+    grown, i = dict(host_of), len(host_of)
+    extra = _specs(sum(svc_counts) + 7)
+    for j in range(sum(svc_counts), sum(svc_counts) + 7):
+        grown[f"s{j}"] = "h-extra"
+    caps2 = dict(caps, **{"h-extra": 9.0})
+    fp2 = FleetSolverProblem(SolverProblem(extra), grown, caps2)
+    for h in fp.hosts:
+        assert fp2.bucket_of[h] == fp.bucket_of[h]
+    # padded layouts cover each member: bucket service max >= any member's
+    for bk in fp.buckets:
+        for h in bk.hosts:
+            assert bk.n_services_max >= sum(
+                1 for s, hh in host_of.items() if hh == h)
+
+
+# -- homogeneous fleets: bucketed == unbucketed, byte for byte ----------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 2 ** 16))
+def test_bucketed_byte_identical_on_homogeneous_fleet(n_hosts, svc_per_host,
+                                                      seed):
+    """On a homogeneous fleet there is ONE bucket whose padded layout equals
+    the old shared layout, so packed->unpacked plans and scores reproduce
+    the unbucketed path byte for byte."""
+    problem, host_of, caps = _fleet([svc_per_host] * n_hosts,
+                                    caps=[6.0] * n_hosts)
+    fb = FleetSolverProblem(problem, host_of, caps)
+    fu = FleetSolverProblem(problem, host_of, caps, bucketed=False)
+    assert len(fb.buckets) == 1
+    models = _models(problem)
+    rps = np.full(len(problem.specs), 50.0, np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(seed), 100.0)
+    a_b, s_b = fb.solve_many(models, rps, x0, n_starts=4, iters=8, seed=seed)
+    a_u, s_u = fu.solve_many(models, rps, x0, n_starts=4, iters=8, seed=seed)
+    assert np.array_equal(a_b, a_u)
+    assert np.array_equal(s_b, s_u)
+
+
+# -- solved plans respect each host's own capacity ---------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.5, 12.0), st.floats(0.5, 12.0), st.integers(0, 2 ** 16))
+def test_bucketed_plans_respect_host_capacity(cap0, cap1, seed):
+    """Whatever the per-host budgets, the solved plan never needs an
+    apply-time capacity clip (fixed layout -> one compile for all draws)."""
+    problem, host_of, caps = _fleet([3, 1], caps=[cap0, cap1])
+    fp = FleetSolverProblem(problem, host_of, caps)
+    models = _models(problem)
+    rps = np.full(4, 50.0, np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(seed), 100.0)
+    a, _ = fp.solve_many(models, rps, x0, n_starts=4, iters=8, seed=seed)
+    assert np.all(a >= problem.lower - 1e-4)
+    assert np.all(a <= problem.upper + 1e-4)
+    for h, svcs in (("h0", (0, 1, 2)), ("h1", (3,))):
+        used = sum(float(a[problem.offsets[i]]) for i in svcs)
+        assert used <= caps[h] + 1e-5 * max(caps[h], 1.0), (h, used)

@@ -25,3 +25,32 @@ def test_autoscale_driver():
     hist = main(["--minutes", "6", "--chips", "16"])
     post = [h.fulfillment for h in hist[25:]]
     assert np.mean(post) > 0.6
+
+
+def test_hetero_fleet_scenario_regression():
+    """Seeded heterogeneous 9-service/3-host run (camera/hub/gateway tiers,
+    mixed workloads): the bucketed per-host path must hold SLO fulfillment
+    and decide every steady-state cycle with ZERO jit recompiles."""
+    from repro.core import RASKAgent, RaskConfig
+    from repro.core.regression import TRACE_COUNTS
+    from repro.env import hetero_environment
+
+    env, knowledge = hetero_environment(duration_s=600, seed=0)
+    assert len(env.platform.services()) == 9
+    assert len(env.platform.hosts()) == 3
+    agent = RASKAgent(env.platform, knowledge,
+                      RaskConfig(xi=15, eta=0.0), seed=0)
+    # three capacity tiers -> three layout buckets
+    assert len(agent.fleet_problem.buckets) == 3
+    env.run(agent, duration_s=350)            # explore + first (cold) solves
+    traces0 = dict(TRACE_COUNTS)
+    hist = env.run(agent, duration_s=150)     # steady state, padding stable
+    recompiles = {k: TRACE_COUNTS[k] - traces0.get(k, 0)
+                  for k in TRACE_COUNTS if TRACE_COUNTS[k] - traces0.get(k, 0)}
+    assert not recompiles, recompiles
+    assert not any(h.explored for h in hist)
+    assert np.mean([h.fulfillment for h in hist]) > 0.7
+    for host in env.platform.hosts():         # per-device budgets hold
+        used = sum(host.assignment(s).get("cores", 0.0)
+                   for s in host.services())
+        assert used <= host.capacity["cores"] + 1e-4

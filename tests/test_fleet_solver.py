@@ -131,3 +131,55 @@ def test_fleet_convergence_with_per_host_solve():
     hist = env.run(agent, duration_s=400)
     post = [h.fulfillment for h in hist[-8:]]
     assert np.mean(post) > 0.85, post
+
+
+# -- bucketed layouts (seeded twins of the hypothesis suite) ------------------
+
+def test_bucketed_solve_matches_sequential_per_host_solves():
+    """ISSUE 4 acceptance: the bucketed dispatch is numerically identical
+    (<= 1e-5) to solving each host's padded subproblem sequentially."""
+    problem = SolverProblem(_specs(10))
+    host_of = {f"s{i}": ("big" if i < 8 else f"small{i}") for i in range(10)}
+    caps = {"big": 16.0, "small8": 2.0, "small9": 2.0}
+    fp = FleetSolverProblem(problem, host_of, caps)
+    assert len(fp.buckets) == 2
+    assert fp.bucket_of["big"] == (8, 8)
+    assert fp.bucket_of["small8"] == (1, 1)
+    models = _models(problem)
+    rps = np.full(10, 50.0, np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(2), 20.0)
+    a_b, s_b = fp.solve_many(models, rps, x0, seed=11)
+    a_q, s_q = fp.solve_sequential(models, rps, x0, seed=11)
+    np.testing.assert_allclose(a_b, a_q, atol=1e-5)
+    np.testing.assert_allclose(s_b, s_q, atol=1e-5)
+
+
+def test_bucketed_is_byte_identical_to_unbucketed_when_homogeneous():
+    """A homogeneous fleet collapses to ONE bucket whose padded layout is
+    the old shared layout — plans and scores reproduce exactly."""
+    problem = SolverProblem(_specs(6))
+    host_of = {f"s{i}": f"h{i % 3}" for i in range(6)}
+    caps = {f"h{i}": 8.0 for i in range(3)}
+    fb = FleetSolverProblem(problem, host_of, caps)
+    fu = FleetSolverProblem(problem, host_of, caps, bucketed=False)
+    assert len(fb.buckets) == 1
+    models = _models(problem)
+    rps = np.full(6, 40.0, np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(4), 24.0)
+    a_b, s_b = fb.solve_many(models, rps, x0, seed=5)
+    a_u, s_u = fu.solve_many(models, rps, x0, seed=5)
+    assert np.array_equal(a_b, a_u)
+    assert np.array_equal(s_b, s_u)
+
+
+def test_bucketed_random_assignment_feasible_per_host():
+    problem = SolverProblem(_specs(10))
+    host_of = {f"s{i}": ("big" if i < 8 else f"small{i}") for i in range(10)}
+    caps = {"big": 16.0, "small8": 2.0, "small9": 2.0}
+    fp = FleetSolverProblem(problem, host_of, caps)
+    groups = {"big": list(range(8)), "small8": [8], "small9": [9]}
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        a = fp.random_assignment(rng)
+        for h, svcs in groups.items():
+            assert _host_cores(problem, a, svcs) <= caps[h] + 1e-3, h

@@ -1,0 +1,192 @@
+"""Marginal-fulfillment placement: score-driven ``Fleet.place``,
+``migrate``/``rebalance`` with hysteresis, and the RASK-side scorer.
+
+ISSUE 4 satellite gates: placement scores match a brute-force per-host
+solve oracle on small fleets; ``rebalance`` is a no-op below the hysteresis
+threshold and idempotent above it; ``_least_loaded`` ties resolve on the
+host id, not dict insertion order.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Fleet, MUDAP, RASKAgent, RaskConfig
+from repro.core.elasticity import ServiceId
+from repro.core.solver import SolverProblem
+from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+from repro.env.profiles import QR_PROFILE
+
+
+class FakeBackend:
+    def __init__(self):
+        self.applied = {}
+
+    def apply(self, param, value):
+        self.applied[param] = value
+
+    def metrics(self):
+        return {"tp": 1.0, **self.applied}
+
+
+def _fleet(names=("edge-0", "edge-1"), cores=8.0, hysteresis=0.05):
+    return Fleet([MUDAP({"cores": cores}, host=n) for n in names],
+                 hysteresis=hysteresis)
+
+
+def _place(fleet, n, host=None, scores=None, cores=2.0):
+    keys = []
+    for i in range(n):
+        sid = ServiceId("any", "qr-detector", f"p{len(fleet.services())}")
+        fleet.place(sid, QR_PROFILE.api, FakeBackend(),
+                    list(QR_PROFILE.slos),
+                    {"cores": cores, "data_quality": 500.0},
+                    host=host, scores=scores)
+        keys.append(str(sid))
+    return keys
+
+
+# -- score-driven place -------------------------------------------------------
+
+def test_place_with_scores_picks_best_host():
+    fleet = _fleet()
+    (key,) = _place(fleet, 1, scores={"edge-0": 0.2, "edge-1": 0.9})
+    assert fleet.host_of(key).host == "edge-1"
+
+
+def test_place_scores_tie_breaks_on_host_id():
+    fleet = _fleet(("edge-b", "edge-a"))
+    (key,) = _place(fleet, 1, scores={"edge-b": 0.5, "edge-a": 0.5})
+    assert fleet.host_of(key).host == "edge-a"
+
+
+def test_place_ignores_unknown_hosts_in_scores():
+    fleet = _fleet()
+    (key,) = _place(fleet, 1, scores={"nope": 9.9, "edge-0": 0.1})
+    assert fleet.host_of(key).host == "edge-0"
+    with pytest.raises(KeyError):
+        _place(fleet, 1, scores={"nope": 1.0})
+
+
+def test_least_loaded_ties_resolve_on_host_id_not_insertion_order():
+    # hosts registered in REVERSE lexicographic order: identical capacity,
+    # identical load -> the placement must still pick the smallest host id
+    fleet = _fleet(("edge-z", "edge-m", "edge-a"))
+    (key,) = _place(fleet, 1)
+    assert fleet.host_of(key).host == "edge-a"
+    # and stays deterministic as load evens out across the fleet
+    hosts = [fleet.host_of(k).host for k in _place(fleet, 5)]
+    assert hosts == ["edge-m", "edge-z", "edge-a", "edge-m", "edge-z"]
+
+
+# -- migrate ------------------------------------------------------------------
+
+def test_migrate_moves_service_and_releases_source():
+    fleet = _fleet()
+    keys = _place(fleet, 2, host="edge-0", cores=3.0)
+    assert fleet.migrate(keys[0], "edge-1") == "edge-1"
+    assert fleet.host_of(keys[0]).host == "edge-1"
+    assert fleet.host_of(keys[1]).host == "edge-0"
+    assert set(fleet.hosts()[1].services()) == {keys[0]}
+    # holdings moved with the service (arbitrated on the destination)
+    assert fleet.assignment(keys[0])["cores"] == pytest.approx(3.0)
+    # same-host migrate is a no-op; unknown host raises
+    assert fleet.migrate(keys[0], "edge-1") == "edge-1"
+    with pytest.raises(KeyError):
+        fleet.migrate(keys[0], "edge-9")
+
+
+# -- rebalance hysteresis -----------------------------------------------------
+
+def test_rebalance_noop_below_hysteresis():
+    fleet = _fleet(hysteresis=0.1)
+    keys = _place(fleet, 2, host="edge-0")
+    # edge-1 is better, but not by more than the gate
+    scores = {k: {"edge-0": 0.50, "edge-1": 0.58} for k in keys}
+    assert fleet.rebalance(scores) == []
+    assert all(fleet.host_of(k).host == "edge-0" for k in keys)
+
+
+def test_rebalance_moves_above_hysteresis_in_gain_order():
+    fleet = _fleet(hysteresis=0.1)
+    keys = _place(fleet, 2, host="edge-0")
+    scores = {keys[0]: {"edge-0": 0.50, "edge-1": 0.75},
+              keys[1]: {"edge-0": 0.50, "edge-1": 0.95}}
+    # limit=1 applies only the LARGEST gain (keys[1])
+    assert fleet.rebalance(scores, limit=1) == [(keys[1], "edge-0", "edge-1")]
+    assert fleet.host_of(keys[1]).host == "edge-1"
+    assert fleet.host_of(keys[0]).host == "edge-0"
+    # unlimited pass applies the remaining qualifying move
+    assert fleet.rebalance(scores) == [(keys[0], "edge-0", "edge-1")]
+    # static scores, everything already at its best host -> no-op
+    assert fleet.rebalance(scores) == []
+
+
+# -- the RASK scorer vs a brute-force oracle ---------------------------------
+
+def _trained_agent(seed=0, hosts=2, replicas=1, duration=120, **cfg):
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          replicas=replicas, hosts=hosts, seed=seed)
+    agent = RASKAgent(env.platform, paper_knowledge(),
+                      RaskConfig(xi=8, eta=0.0, pgd_starts=4, pgd_iters=12,
+                                 **cfg), seed=seed)
+    env.run(agent, duration_s=duration)
+    return env, agent
+
+
+def test_placement_scores_match_bruteforce_per_host_oracle():
+    env, agent = _trained_agent()
+    scores = agent.placement_scores()
+    assert set(scores) == set(agent.services)
+    problem = agent.problem
+    sidx = {s.name: i for i, s in enumerate(problem.specs)}
+    rps = agent._rps_vector(None)
+    x0 = agent._cached_x
+
+    def oracle(idx, capacity):
+        if not idx:
+            return 0.0
+        sub = SolverProblem([problem.specs[i] for i in idx])
+        sub_models = {problem.specs[i].name:
+                      agent.models[problem.specs[i].name] for i in idx}
+        sub_x0 = np.concatenate(
+            [x0[problem.offsets[i]:problem.offsets[i]
+                + problem.specs[i].n_params] for i in idx])
+        _, score = sub.solve_pgd(sub_models, rps[list(idx)], sub_x0,
+                                 capacity, n_starts=4, iters=12, seed=0)
+        return float(score)
+
+    sid = agent.services[0]
+    i = sidx[sid]
+    for host in env.platform.hosts():
+        residents = tuple(sorted(sidx[s] for s in host.services()))
+        cap = host.capacity["cores"]
+        if i in residents:
+            expect = oracle(residents, cap) - \
+                oracle(tuple(j for j in residents if j != i), cap)
+        else:
+            expect = oracle(tuple(sorted(residents + (i,))), cap) - \
+                oracle(residents, cap)
+        assert scores[sid][host.host] == pytest.approx(expect, abs=1e-5)
+
+
+def test_rebalance_drains_overloaded_host_then_is_idempotent():
+    """All services crammed on one device of two: rebalance moves some to
+    the idle device (decisive gains), converges, and a second rebalance is
+    a no-op (idempotence above the hysteresis threshold)."""
+    profiles = list(paper_profiles().values())
+    env = EdgeEnvironment(profiles, patterns=None, replicas=1, seed=0,
+                          hosts=[("edge-0", {"cores": 2.0}),
+                                 ("edge-1", {"cores": 8.0})],
+                          placement=["edge-0", "edge-0", "edge-0"])
+    agent = RASKAgent(env.platform, paper_knowledge(),
+                      RaskConfig(xi=8, eta=0.0, pgd_starts=4, pgd_iters=12),
+                      seed=0)
+    env.run(agent, duration_s=120)
+    moves = agent.rebalance()
+    assert moves, "cramming 3 services on 2 cores must trigger migrations"
+    assert all(dst == "edge-1" for _, _, dst in moves)
+    # the fleet solve followed the topology: layouts rebuild, decide works
+    assert agent.fleet_problem.layout_key[1] != ()
+    assert agent.rebalance() == []            # idempotent at the fixed point
+    plan = agent.decide(agent.observe(env.t))
+    receipt = env.platform.apply_plan(plan)
+    assert receipt.ok
