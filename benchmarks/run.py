@@ -86,6 +86,13 @@ def _report_from_artifacts(name, common) -> bool:
         from . import e7_hot_path
         e7_hot_path.report(r)
         return True
+    if name == "e8":
+        from . import e8_placement
+        r = common.load(e8_placement.ARTIFACT)
+        if not r:
+            return False
+        e8_placement.report(r)
+        return True
     return False
 
 
@@ -117,6 +124,42 @@ def check_e6() -> int:
     print(f"e6-check[parity],0,{row['parity_max_abs_diff']:.2e}")
     print(f"e6-check[recompiles],0,{scen['steady_state_recompiles']}")
     print(f"e6-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
+
+
+def check_e8() -> int:
+    """Placement-scorer regression gate vs the committed e8 artifact: the
+    batched snapshot must stay within 1.5x of the committed time (CI
+    machine headroom), keep a real batched-vs-brute-force speedup, match
+    the per-candidate oracle to 1e-5, and re-score without a single jit
+    recompile."""
+    from . import common, e8_placement
+
+    committed = common.load("e8_placement")
+    if not committed or "scorer" not in committed:
+        print("e8-check,1,missing-committed-artifact")
+        return 1
+    e8_placement.REPS = 3
+    e8_placement.BRUTE_REPS = 2
+    e8_placement.TRAIN_CYCLES = 12
+    e8_placement.ARTIFACT = "e8_placement_check"
+    row = e8_placement.run(stages=("scorer",))["scorer"]
+    ref = committed["scorer"]
+    limit = 1.5 * ref["batched_us"]
+    recompiles = sum((row.get("recompiles_during_scoring") or {}).values())
+    ok = (row["batched_us"] <= limit
+          and row["speedup"] >= 2.0
+          and row["parity_max_abs_diff"] <= 1e-5
+          and row["argmax_match"]
+          and recompiles == 0)
+    print(f"e8-check[batched],{row['batched_us']:.0f},"
+          f"limit={limit:.0f}us committed={ref['batched_us']:.0f}us")
+    print(f"e8-check[speedup],0,{row['speedup']:.2f}x "
+          f"(committed {ref['speedup']:.2f}x)")
+    print(f"e8-check[parity],0,{row['parity_max_abs_diff']:.2e} "
+          f"argmax_match={row['argmax_match']}")
+    print(f"e8-check[recompiles],0,{recompiles}")
+    print(f"e8-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
     return 0 if ok else 1
 
 
@@ -159,19 +202,19 @@ def main() -> None:
                     help="recompute even when an artifact exists")
     ap.add_argument("--check", default=None, metavar="SUITE",
                     help="regression gate: compare a quick run against the "
-                         "committed artifact (supported: e7); exits nonzero "
-                         "on regression")
+                         "committed artifact (supported: e6, e7, e8); exits "
+                         "nonzero on regression")
     args = ap.parse_args()
 
     if args.check:
-        checks = {"e6": check_e6, "e7": check_e7}
+        checks = {"e6": check_e6, "e7": check_e7, "e8": check_e8}
         if args.check not in checks:
             ap.error(f"--check supports {sorted(checks)}, got {args.check!r}")
         sys.exit(checks[args.check]())
 
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,
-                   e6_scalability, e7_hot_path, roofline)
+                   e6_scalability, e7_hot_path, e8_placement, roofline)
 
     if args.quick:
         common.REPS = 2
@@ -191,6 +234,14 @@ def main() -> None:
         e6_scalability.SCENARIO_DURATION = 300.0
         e6_scalability.SOLVE_REPS = 3
         e6_scalability.HETERO_ARTIFACT = "e6_hetero_quick"
+        # CI-sized placement smoke: fewer reps/training cycles, a short
+        # failover scenario; separate artifact so the committed acceptance
+        # record (scorer speedup + full failover trace) is not clobbered
+        e8_placement.REPS = 3
+        e8_placement.BRUTE_REPS = 2
+        e8_placement.TRAIN_CYCLES = 12
+        e8_placement.FAILOVER_DURATION = 500.0
+        e8_placement.ARTIFACT = "e8_placement_quick"
 
     suites = {
         "e1": e1_convergence.main,
@@ -201,6 +252,7 @@ def main() -> None:
         "e6": lambda: e6_scalability.main([]),
         "e6h": e6_scalability.main_hetero,
         "e7": e7_hot_path.main,
+        "e8": e8_placement.main,
         "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -13,7 +13,8 @@ from .regression import (BatchedFitPlan, PolynomialModel, StackedModels,
                          polynomial_exponents, select_degree, stack_models)
 from .slo import SLO, completion, fulfillment, global_fulfillment, \
     service_fulfillment, violation_rate
-from .solver import FleetSolverProblem, ServiceSpec, SolverProblem
+from .solver import FleetSolverProblem, PlacementProblem, ServiceSpec, \
+    SolverProblem
 
 __all__ = [
     "Agent", "APPLIED", "CLIPPED", "REJECTED", "CycleResult", "DecisionInfo",
@@ -25,5 +26,5 @@ __all__ = [
     "fit_polynomial", "mse", "polynomial_exponents", "select_degree",
     "stack_models", "SLO", "completion", "fulfillment",
     "global_fulfillment", "service_fulfillment", "violation_rate",
-    "FleetSolverProblem", "ServiceSpec", "SolverProblem",
+    "FleetSolverProblem", "PlacementProblem", "ServiceSpec", "SolverProblem",
 ]

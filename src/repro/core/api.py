@@ -191,6 +191,12 @@ class DecisionInfo:
     # — kept out of runtime_s so E4-E6 runtime plots are not skewed by a
     # one-off compilation spike on the first post-exploration cycle
     compile_s: float = 0.0
+    # active PGD solver budget of this decide (0: not a PGD solve cycle) —
+    # observable record of the online budget adaptation
+    pgd_starts: int = 0
+    pgd_iters: int = 0
+    # placement migrations applied by the per-cycle rebalance stage
+    moves: int = 0
 
 
 @dataclasses.dataclass

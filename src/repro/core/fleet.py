@@ -101,7 +101,7 @@ class Fleet:
             raise KeyError(f"no known host in scores {sorted(scores)}")
         return min(known, key=lambda h: (-known[h], h))
 
-    def _least_loaded(self) -> str:
+    def _least_loaded(self, exclude: Sequence[str] = ()) -> str:
         """Host with the largest worst-case fractional headroom.  All ties
         — equal headroom, then equal service count — resolve on the host id
         (NOT registration/dict order), so placement is reproducible across
@@ -114,15 +114,24 @@ class Fleet:
             headroom = min(fracs) if fracs else 1.0
             return (-headroom, len(h.services()), h.host)
 
-        return min(self._hosts.values(), key=score).host
+        pool = [h for n, h in self._hosts.items() if n not in set(exclude)]
+        if not pool:
+            raise ValueError("no eligible host")
+        return min(pool, key=score).host
 
-    def migrate(self, sid: str, host: str) -> str:
+    def migrate(self, sid: str, host: str,
+                carry_telemetry: bool = True) -> str:
         """Move a placed service to ``host``: deregister from the source
         (its holdings are released), re-register on the destination with the
         same API/SLOs/backend and its last-applied assignment (arbitrated
-        against the destination's own capacity).  A failed destination
-        register restores the source placement, so a migration is
-        all-or-nothing."""
+        against the destination's own capacity), and carry its telemetry
+        ring-buffer window into the destination host's DB — windowed
+        queries (``window_state``/``window_means``) are identical across
+        the move, so the agent's stabilized-state observations and training
+        feed survive rebalancing.  ``carry_telemetry=False`` models an
+        abrupt host *failure*, where the source DB is lost with the host.
+        A failed destination register restores the source placement (and
+        touches no telemetry), so a migration is all-or-nothing."""
         key = str(sid)
         src = self._placement[key]
         if host not in self._hosts:
@@ -139,6 +148,8 @@ class Fleet:
             self._hosts[src].register(svc.sid, svc.api, svc.backend,
                                       list(svc.slos), assignment)
             raise
+        if carry_telemetry:
+            self._hosts[src].db.transfer(key, self._hosts[host].db)
         self._placement[key] = host
         return host
 
@@ -191,6 +202,61 @@ class Fleet:
         host = self._placement.pop(key, None)
         if host is not None:
             self._hosts[host].deregister(key)
+
+    # -- churn: hosts leaving / losing capacity mid-run ------------------------
+    def evacuate(self, name: str,
+                 scores: Optional[Mapping[str, Mapping[str, float]]] = None,
+                 carry_telemetry: bool = True) -> List[Tuple[str, str, str]]:
+        """Migrate every resident off host ``name`` (failure or drain).
+
+        Destinations come from each service's ``scores`` row (sid -> {host
+        -> predicted marginal fulfillment}, e.g. the batched
+        ``RASKAgent.placement_scores``) restricted to OTHER hosts; services
+        without a scored row fall back to the least-loaded other host.
+        ``carry_telemetry`` as in ``migrate`` (False = the failed host's DB
+        is lost).  Returns the applied moves (sid, from, to); the emptied
+        host stays in the fleet until ``remove_host``."""
+        if name not in self._hosts:
+            raise KeyError(f"unknown host {name!r}")
+        if len(self._hosts) < 2:
+            raise ValueError(f"no other host to evacuate {name!r} onto")
+        moves: List[Tuple[str, str, str]] = []
+        for sid in sorted(self._hosts[name].services()):
+            row = {h: float(s) for h, s in (scores or {}).get(sid, {}).items()
+                   if h in self._hosts and h != name}
+            dst = self._best_host(row) if row \
+                else self._least_loaded(exclude=(name,))
+            self.migrate(sid, dst, carry_telemetry=carry_telemetry)
+            moves.append((sid, name, dst))
+        return moves
+
+    def remove_host(self, name: str) -> MUDAP:
+        """Drop an (evacuated) host from the fleet.  The host must hold no
+        services — evacuate first (``env.simulator`` fail/drain events
+        migrate residents via the placement scorer before removing the
+        device).  Returns the detached MUDAP."""
+        if name not in self._hosts:
+            raise KeyError(f"unknown host {name!r}")
+        residents = self._hosts[name].services()
+        if residents:
+            raise ValueError(
+                f"host {name!r} still holds {sorted(residents)}; "
+                f"evacuate before removing it")
+        return self._hosts.pop(name)
+
+    def set_capacity(self, name: str, resource: str, value: float) -> float:
+        """Change one host's resource budget in place (capacity
+        degradation/recovery).  Existing holdings are NOT clawed back — the
+        next applied plan arbitrates against the new budget (and per-host
+        solvers rebuilt after this see it immediately).  Returns the new
+        value."""
+        host = self._hosts.get(name)
+        if host is None:
+            raise KeyError(f"unknown host {name!r}")
+        if resource not in host.capacity:
+            raise KeyError(f"host {name!r} has no resource {resource!r}")
+        host.capacity[resource] = float(value)
+        return float(value)
 
     # -- registry views --------------------------------------------------------
     def services(self) -> List[str]:

@@ -42,7 +42,18 @@ Beyond-paper extensions (used in EXPERIMENTS.md §Perf):
   * ``auto_degree`` — per-service polynomial degree selected by test-split MSE
     (the E2/§VI-C2 recommendation);
   * ``objective_impl`` — scoring kernel for the PGD candidates
-    ("reference" | "pallas" | "pallas_interpret", kernels/rask_objective.py).
+    ("reference" | "pallas" | "pallas_interpret", kernels/rask_objective.py);
+  * ``rebalance_every`` — per-cycle placement stage: every N cycles one
+    candidate-batched ``placement_scores`` snapshot (ONE jitted dispatch for
+    all (service, host) what-ifs — ``PlacementProblem``) and at most one
+    migration toward higher predicted marginal fulfillment;
+  * ``adapt_budget`` — online solver budget adaptation: pgd_iters/pgd_starts
+    halve toward floors while the warm-start optimum is stationary (E5
+    steady state) and restore on load shifts; the active budget is recorded
+    in ``DecisionInfo``;
+  * ``refresh_topology`` — re-binds the agent after churn (host failure or
+    drain, capacity degradation, service arrival/departure) without
+    discarding surviving services' models, training rows, or warm starts.
 """
 from __future__ import annotations
 
@@ -61,8 +72,8 @@ from .platform import MUDAP
 from .regression import BatchedFitPlan, PolynomialModel, StackedModels, \
     TRACE_COUNTS, fit_batched_arrays, fit_polynomial, pad_capacity, \
     select_degree
-from .solver import FleetSolverProblem, ServiceSpec, SolverProblem, \
-    cached_fn, pgd_solve
+from .solver import FleetSolverProblem, PlacementProblem, ServiceSpec, \
+    SolverProblem, cached_fn, pgd_solve
 from .telemetry import TrainingTable
 
 # Structural knowledge K: per service, target -> feature parameter names.
@@ -88,6 +99,32 @@ class RaskConfig:
     resource: str = "cores"     # the shared-capacity resource name
     fused: bool = True          # batched fit + fused objective (False: seed loop)
     objective_impl: str = "reference"  # PGD candidate scoring kernel
+    # per-cycle placement stage: every N post-exploration cycles take one
+    # batched placement-score snapshot and apply at most one migration
+    # (0 = off; rebalancing then only happens via explicit ``rebalance()``)
+    rebalance_every: int = 0
+    # placement scoring budget: candidate subsets are warm-started from the
+    # cached optimum's slices and only their marginal ORDERING matters (the
+    # hysteresis gate absorbs score polish), so the scorer runs a lighter
+    # deterministic budget than the decide solve — this is what makes the
+    # one-dispatch snapshot cheap enough for the per-cycle stage
+    score_starts: int = 4
+    score_iters: int = 16
+    # online solver budget adaptation (beyond-paper, opt-in): shrink
+    # pgd_iters/pgd_starts toward the floors while the warm-started optimum
+    # value stays within adapt_tol for adapt_patience consecutive solve
+    # cycles (E5 steady state); restore the full budget on any larger move
+    # (a load shift)
+    adapt_budget: bool = False
+    adapt_tol: float = 0.01         # relative solver-score movement = calm
+    # restore threshold (None -> 5 * adapt_tol): a shrunk budget solves
+    # noisier, so the gap between "not calm" and "load shift" is hysteresis
+    # — without it the floor budget's own solution noise would restore the
+    # full budget and the adaptation would flap
+    adapt_restore_tol: Optional[float] = None
+    adapt_patience: int = 3         # calm cycles before each halving
+    adapt_iters_floor: int = 8
+    adapt_starts_floor: int = 2
 
 
 class RASKAgent(PlanningAgent):
@@ -114,8 +151,8 @@ class RASKAgent(PlanningAgent):
         # solve per layout bucket) instead of the aggregate relaxation
         self.fleet_problem: Optional[FleetSolverProblem] = None
         self._build_fleet_problem()
-        self._sub_problems: Dict[tuple, SolverProblem] = {}  # placement oracle
-        self._subset_scores: Dict[tuple, float] = {}         # memoized scores
+        # candidate-batched placement scorers, keyed on residency topology
+        self._placement_cache: Dict[tuple, PlacementProblem] = {}
         self._models_loop: Dict[str, Dict[str, PolynomialModel]] = {}
         self._models_view: Optional[Dict[str, Dict[str, PolynomialModel]]] = None
         self.stacked: Optional[StackedModels] = None   # fused-path models
@@ -127,8 +164,17 @@ class RASKAgent(PlanningAgent):
         self._timed_first_solve = False  # classic-path compile accounting
         self._cycle_draws = None         # per-decide randomness (reused on re-run)
         self._last_solve_cold = False    # last _solve_cycle compiled a variant
-        # static per-relation fit metadata (feature names + scales), in the
-        # problem's global relation order
+        # online budget adaptation state (active PGD budget; equals the
+        # configured budget unless adapt_budget has shrunk it)
+        self._budget_iters = self.cfg.pgd_iters
+        self._budget_starts = self.cfg.pgd_starts
+        self._calm_cycles = 0
+        self._last_score: Optional[float] = None
+        self._build_rel_static()
+
+    def _build_rel_static(self) -> None:
+        """Static per-relation fit metadata (feature names + scales), in the
+        problem's global relation order."""
         self._rel_static: List[Tuple[str, str, Tuple[str, ...], np.ndarray]] = []
         for _, sid, target, _ in self.problem.relations:
             svc = self.platform.service(sid)
@@ -211,11 +257,13 @@ class RASKAgent(PlanningAgent):
             self.last_decision = DecisionInfo(explored=True)
             return self._plan(self._explore())
 
+        moves = self._maybe_rebalance(obs)    # optional per-cycle placement
         t0 = time.perf_counter()
         self._cycle_draws = None      # per-cycle randomness, drawn once
         out = self._solve_cycle(obs)                        # lines 6-11
         if out is None:
-            self.last_decision = DecisionInfo(explored=True)
+            self.last_decision = DecisionInfo(explored=True,
+                                              moves=len(moves))
             return self._plan(self._explore())
         if self._last_solve_cold:
             # that run paid jit trace+compile time: re-run the whole cycle
@@ -232,11 +280,81 @@ class RASKAgent(PlanningAgent):
         else:
             runtime, compile_s = time.perf_counter() - t0, 0.0
         a, noised, score = out
+        used_starts, used_iters = self._budget_starts, self._budget_iters
         self._cached_x = np.asarray(a, np.float32)          # §IV-B3 cache
+        prev_score, self._last_score = self._last_score, float(score)
+        self._adapt_budget(prev_score, float(score))
         self.last_decision = DecisionInfo(
             explored=False, runtime_s=runtime, compile_s=compile_s,
-            score=score)
+            score=score, pgd_starts=used_starts, pgd_iters=used_iters,
+            moves=len(moves))
         return self._plan(noised)
+
+    def _maybe_rebalance(self, obs) -> List[Tuple[str, str, str]]:
+        """The optional per-cycle placement stage (``rebalance_every=N``):
+        every N post-exploration cycles take ONE fresh batched score
+        snapshot and apply at most one migration — the monotone one-move-
+        per-snapshot ascent of ``rebalance``, amortized over cycles.  A
+        topology change rebuilds the fleet solve (one recompile per applied
+        move; none at the rebalance fixed point)."""
+        n = self.cfg.rebalance_every
+        if (n <= 0 or self.fleet_problem is None
+                or self.rounds < self.cfg.xi
+                or (self.rounds - self.cfg.xi) % n != 0):
+            return []
+        scores = self.placement_scores(obs)
+        if not scores:
+            return []
+        moves = self.platform.rebalance(scores, limit=1)
+        if moves:
+            self._build_fleet_problem()
+            # the migration changes the solve's score baseline by design
+            # (that is why the move was chosen): grace the budget
+            # adaptation so the jump is not misread as a load shift
+            self._last_score = None
+        return moves
+
+    def _adapt_budget(self, prev_score: Optional[float],
+                      score: float) -> None:
+        """Online solver budget adaptation (opt-in ``adapt_budget``): E5
+        shows the warm-started optimum barely moves at steady state — in
+        VALUE; the argmax itself wanders the flat basin with the per-cycle
+        multi-start draws — so convergence is measured on the solver score.
+        A relative score move below ``adapt_tol`` for ``adapt_patience``
+        consecutive solve cycles halves the PGD budget toward the floors; a
+        move past ``adapt_restore_tol`` (a load shift — well above the
+        noise floor of a shrunk budget's own solves) restores the
+        configured budget at once, and the band between the two thresholds
+        just resets the calm counter (hysteresis, so the floor budget's
+        solution noise cannot flap the budget back up).  Each budget level
+        is its own compiled pipeline variant
+        (O(log) many), so a settled budget pays no recompiles; the cycle
+        right after a budget change is a grace cycle (its score jump is the
+        budget's doing, not the load's)."""
+        cfg = self.cfg
+        if not cfg.adapt_budget or prev_score is None \
+                or not np.isfinite(prev_score) or not np.isfinite(score):
+            return
+        restore_tol = cfg.adapt_restore_tol \
+            if cfg.adapt_restore_tol is not None else 5.0 * cfg.adapt_tol
+        move = abs(score - prev_score) / max(abs(prev_score), 1.0)
+        if move >= cfg.adapt_tol:
+            self._calm_cycles = 0
+            if move >= restore_tol and \
+                    (self._budget_iters, self._budget_starts) != \
+                    (cfg.pgd_iters, cfg.pgd_starts):
+                self._budget_iters = cfg.pgd_iters
+                self._budget_starts = cfg.pgd_starts
+                self._last_score = None     # grace cycle after the change
+            return
+        self._calm_cycles += 1
+        if self._calm_cycles >= cfg.adapt_patience:
+            iters = max(self._budget_iters // 2, cfg.adapt_iters_floor)
+            starts = max(self._budget_starts // 2, cfg.adapt_starts_floor)
+            if (iters, starts) != (self._budget_iters, self._budget_starts):
+                self._budget_iters, self._budget_starts = iters, starts
+                self._last_score = None     # grace cycle after the change
+            self._calm_cycles = 0
 
     def _solve_cycle(self, obs):
         """One full fit+solve+NOISE pass; returns (optimum, noised plan
@@ -307,7 +425,7 @@ class RASKAgent(PlanningAgent):
 
     def _fused_key(self) -> tuple:
         fp = self.fleet_problem
-        return (self._fit_plan_key, self.cfg.pgd_starts, self.cfg.pgd_iters,
+        return (self._fit_plan_key, self._budget_starts, self._budget_iters,
                 self.cfg.pgd_lr, self.cfg.objective_impl,
                 None if fp is None else fp.layout_key)
 
@@ -319,8 +437,8 @@ class RASKAgent(PlanningAgent):
         problem = self.problem
         fp = self.fleet_problem
         cfg = self.cfg
-        solve = partial(pgd_solve, n_starts=cfg.pgd_starts,
-                        iters=cfg.pgd_iters, lr=cfg.pgd_lr,
+        solve = partial(pgd_solve, n_starts=self._budget_starts,
+                        iters=self._budget_iters, lr=cfg.pgd_lr,
                         objective_impl=cfg.objective_impl)
         capacity = jnp.float32(self.capacity)
 
@@ -378,7 +496,7 @@ class RASKAgent(PlanningAgent):
         if self.cfg.backend == "pgd":
             a, score = self.problem.solve_pgd(
                 models, rps, x0, self.capacity,
-                n_starts=self.cfg.pgd_starts, iters=self.cfg.pgd_iters,
+                n_starts=self._budget_starts, iters=self._budget_iters,
                 lr=self.cfg.pgd_lr, seed=seed,
                 objective_impl=self.cfg.objective_impl)
         else:                                                # line 10
@@ -465,52 +583,65 @@ class RASKAgent(PlanningAgent):
             return self._degrees[sid]
         return self.cfg.delta
 
-    # -- marginal-fulfillment placement (ROADMAP: placement optimization) -------
-    def _subset_solve(self, idx: Tuple[int, ...], capacity: float,
-                      rps: np.ndarray, x0: np.ndarray) -> float:
-        """Best predicted weighted fulfillment of the services ``idx``
-        (global spec indices) alone under ``capacity`` — the brute-force
-        per-host oracle behind ``placement_scores``."""
-        if not idx:
-            return 0.0
-        # memoized on the full solve input: a rebalance pass re-scores the
-        # fleet after every move, but only the two touched hosts' subsets
-        # actually change — everything else is a cache hit
-        mkey = (idx, float(capacity), rps.tobytes(),
-                np.asarray(x0, np.float32).tobytes())
-        hit = self._subset_scores.get(mkey)
-        if hit is not None:
-            return hit
-        problem = self.problem
-        sub = cached_fn(self._sub_problems, idx,
-                        lambda: SolverProblem([problem.specs[i] for i in idx]),
-                        size=64)
-        models = self.models
-        sub_models = {problem.specs[i].name: models[problem.specs[i].name]
-                      for i in idx}
-        sub_x0 = np.concatenate(
-            [x0[problem.offsets[i]:problem.offsets[i]
-                + problem.specs[i].n_params] for i in idx])
-        _, score = sub.solve_pgd(
-            sub_models, rps[list(idx)], sub_x0, capacity,
-            n_starts=self.cfg.pgd_starts, iters=self.cfg.pgd_iters,
-            lr=self.cfg.pgd_lr, seed=0,
-            objective_impl=self.cfg.objective_impl)
-        if len(self._subset_scores) >= 512:
-            self._subset_scores.pop(next(iter(self._subset_scores)))
-        self._subset_scores[mkey] = float(score)
-        return float(score)
+    # -- marginal-fulfillment placement (candidate-batched scorer) --------------
+    def _placement_problem(self, residents: Dict[str, Tuple[int, ...]],
+                           caps: Dict[str, float]
+                           ) -> Tuple[PlacementProblem,
+                                      Dict[Tuple[str, str], Tuple[int, int]]]:
+        """The candidate batch for the CURRENT residency: per host its
+        resident subset, plus per (service, host) the with/without what-if
+        variant — deduplicated (all of a host's 'without' variants share its
+        base subset) and compiled once per topology (bounded cache).
+        Returns the (cached) ``PlacementProblem`` and the candidate-index
+        plan {(sid, host): (with_id, without_id)}."""
+        hosts = sorted(residents)
+        sidx = {s.name: i for i, s in enumerate(self.problem.specs)}
+        cand: Dict[Tuple[str, Tuple[int, ...]], int] = {}
+        subsets: List[Tuple[int, ...]] = []
+        capacities: List[float] = []
 
-    def placement_scores(self, obs: Optional[Mapping] = None
-                         ) -> Dict[str, Dict[str, float]]:
+        def cid(host: str, subset: Tuple[int, ...]) -> int:
+            k = cand.get((host, subset))
+            if k is None:
+                k = cand[(host, subset)] = len(subsets)
+                subsets.append(subset)
+                capacities.append(float(caps[host]))
+            return k
+
+        plan: Dict[Tuple[str, str], Tuple[int, int]] = {}
+        base = {h: cid(h, residents[h]) for h in hosts}
+        for sid in self.services:
+            i = sidx[sid]
+            cur = self.platform.host_of(sid).host
+            for h in hosts:
+                if h == cur:
+                    plan[(sid, h)] = (
+                        base[h],
+                        cid(h, tuple(j for j in residents[h] if j != i)))
+                else:
+                    plan[(sid, h)] = (
+                        cid(h, tuple(sorted(residents[h] + (i,)))), base[h])
+        key = tuple((h, residents[h], float(caps[h])) for h in hosts)
+        pp = cached_fn(self._placement_cache, key,
+                       lambda: PlacementProblem(self.problem, subsets,
+                                                capacities), size=4)
+        return pp, plan
+
+    def placement_scores(self, obs: Optional[Mapping] = None,
+                         batched: bool = True) -> Dict[str, Dict[str, float]]:
         """Predicted marginal SLO fulfillment of every (service, host) pair.
 
         For service s and host h: solve h's residents WITH s under h's own
         budget, minus the solve WITHOUT s — the fulfillment the fleet gains
         (or loses, when s squeezes the residents' shares) by hosting s on h.
-        Deterministic (fixed solver seed), so ``Fleet.rebalance`` fed these
-        scores is idempotent.  Returns {} off a Fleet or until every
-        relation has a fitted model (exploration phase).
+        All O(|S| x |H|) candidate subsets are scored in ONE jitted vmapped
+        dispatch (``PlacementProblem``), cheap enough to run every cycle;
+        ``batched=False`` routes the same padded candidates through the
+        per-candidate brute-force dispatch loop — the parity oracle and the
+        PR-4 cost shape the e8 benchmark times against.  Deterministic
+        (fixed solver seed), so ``Fleet.rebalance`` fed these scores is
+        idempotent.  Returns {} off a Fleet or until every relation has a
+        fitted model (exploration phase).
         """
         if self.fleet_problem is None:
             return {}
@@ -521,7 +652,7 @@ class RASKAgent(PlanningAgent):
         problem = self.problem
         rps = self._rps_vector(obs)
         x0 = self._cached_x if self._cached_x is not None else \
-            0.5 * (problem.lower + problem.upper)
+            (0.5 * (problem.lower + problem.upper)).astype(np.float32)
         sidx = {s.name: i for i, s in enumerate(problem.specs)}
         hosts = {h.host: h for h in self.platform.hosts()}
         caps = {name: h.capacity[self.cfg.resource]
@@ -529,25 +660,22 @@ class RASKAgent(PlanningAgent):
         residents = {name: tuple(sorted(sidx[s] for s in h.services()
                                         if s in sidx))
                      for name, h in hosts.items()}
-        base = {name: self._subset_solve(residents[name], caps[name], rps, x0)
-                for name in hosts}
+        pp, plan = self._placement_problem(residents, caps)
+        models = self.stacked \
+            if (self.cfg.fused and self.stacked is not None) else self.models
+        # the configured scoring budget, never the online-adapted decide
+        # budget: scores stay deterministic across cycles, so the rebalance
+        # fixed point cannot flap with the budget level
+        score_fn = pp.scores if batched else pp.scores_sequential
+        vec = score_fn(models, rps, x0, n_starts=self.cfg.score_starts,
+                       iters=self.cfg.score_iters, lr=self.cfg.pgd_lr, seed=0,
+                       objective_impl=self.cfg.objective_impl)
         out: Dict[str, Dict[str, float]] = {}
         for sid in self.services:
-            i = sidx[sid]
-            cur = self.platform.host_of(sid).host
             row = {}
             for name in hosts:
-                if name == cur:
-                    with_s = base[name]
-                    without = self._subset_solve(
-                        tuple(j for j in residents[name] if j != i),
-                        caps[name], rps, x0)
-                else:
-                    with_s = self._subset_solve(
-                        tuple(sorted(residents[name] + (i,))),
-                        caps[name], rps, x0)
-                    without = base[name]
-                row[name] = with_s - without
+                w, wo = plan[(sid, name)]
+                row[name] = float(vec[w] - vec[wo])
             out[sid] = row
         return out
 
@@ -577,6 +705,59 @@ class RASKAgent(PlanningAgent):
         if all_moves:
             self._build_fleet_problem()   # bucket layouts follow placement
         return all_moves
+
+    def refresh_topology(self) -> None:
+        """Re-bind the agent to the platform's CURRENT topology after churn
+        (host failure/drain, capacity degradation, service arrival or
+        departure — ``env.simulator`` churn events call this).
+
+        Placement-only changes (same service set) keep the fitted models,
+        the training table and the warm start — only the per-host fleet
+        solve and the aggregate capacity rebuild.  Service-set changes
+        rebuild the optimization problem, carrying each surviving service's
+        warm-start slice over by name; models refit from the (persistent)
+        training table on the next cycle, and until every NEW relation has
+        >= 3 observed rows the agent re-enters exploration, like the
+        initial xi phase."""
+        current = self.platform.services()
+        kept = [s for s in self.services if s in set(current)]
+        new = [s for s in current if s not in set(self.services)]
+        self.capacity = self.platform.capacity[self.cfg.resource]
+        # churn is a regime change: restore the full solver budget and let
+        # the score baseline re-establish before adapting again
+        self._budget_iters = self.cfg.pgd_iters
+        self._budget_starts = self.cfg.pgd_starts
+        self._calm_cycles = 0
+        self._last_score = None
+        if kept == self.services and not new:
+            self._build_fleet_problem()   # placement/capacity change only
+            return
+        old_slice = {s.name: (self.problem.offsets[i], s.n_params)
+                     for i, s in enumerate(self.problem.specs)}
+        prev_x = self._cached_x
+        self.services = kept + new
+        self.problem = self._build_problem()
+        self._build_fleet_problem()
+        self._build_rel_static()
+        self._placement_cache.clear()
+        # warm start: surviving services keep their cached slices, new ones
+        # start at the box midpoint (projected feasible at first use)
+        if prev_x is not None:
+            x = (0.5 * (self.problem.lower + self.problem.upper)
+                 ).astype(np.float32)
+            for i, s in enumerate(self.problem.specs):
+                if s.name in old_slice:
+                    off, n = old_slice[s.name]
+                    o = self.problem.offsets[i]
+                    x[o:o + n] = prev_x[off:off + n]
+            self._cached_x = x
+        self.stacked = None               # refit against the new relation set
+        self._models_view = None
+        self._fit_plan = None
+        self._fit_plan_key = None
+        for sid in list(self._models_loop):
+            if sid not in set(self.services):
+                self._models_loop.pop(sid)
 
     # -- NOISE (Eq. 5) ------------------------------------------------------------
     def _eta_t(self) -> float:

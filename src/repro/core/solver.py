@@ -35,7 +35,19 @@ serve three callers:
   (dims, relations, SLOs) and vmapped with per-host capacities in one jitted
   dispatch, replacing both the aggregate-capacity relaxation a Fleet used to
   be solved against and the single fleet-max padded layout that made a small
-  host's solve cost scale with the largest host.
+  host's solve cost scale with the largest host;
+* ``PlacementProblem`` — K candidate (service subset, capacity) rows —
+  which may OVERLAP in services, unlike a fleet's partition — bucketed
+  through the same machinery and scored in one dispatch, making per-cycle
+  placement rebalancing affordable (``RASKAgent.placement_scores``).
+
+``bucketed="auto"`` (the default for both fleet and placement batches)
+additionally merges single-member buckets into a neighboring layout; for
+*fleets* it also collapses tiny mixed fleets to the single shared layout,
+where the per-bucket compiled scan would cost more than the padding it
+saves (the XLA-CPU dispatch floor; ROADMAP tiny-fleet follow-up).
+Placement batches keep their (few, well-filled) buckets — measured on the
+e8 candidate set, collapsing them bought nothing.
 
 The seed's per-service loop objective survives as ``objective_loop`` (used
 by the parity tests and the e7 benchmark's pre-PR baseline); construct
@@ -573,13 +585,73 @@ def bucket_key(n_services: int, n_relations: int) -> Tuple[int, int]:
     return layout_bucket(n_services), layout_bucket(n_relations)
 
 
-class FleetBucket:
-    """One padded per-host layout shared by a group of like-sized hosts.
+# auto bucketing (ROADMAP tiny-fleet follow-up): below ~a dozen hosts per
+# bucket the extra compiled scan each bucket adds to the jitted program
+# costs more on XLA-CPU (the dispatch floor) than the padding it saves —
+# unless the layouts are so unequal that the single-layout padding dominates
+_AUTO_BUCKET_MIN_HOSTS = 12
+_AUTO_PAD_FACTOR = 2.0
 
-    Holds the batched ``ProblemTables`` (leading axis = hosts in the bucket,
+
+def _merge_singleton_groups(keys: List[tuple], groups: Dict[tuple, list]
+                            ) -> Tuple[List[tuple], Dict[tuple, list]]:
+    """Fold 1-member layout groups into the neighboring group with the next
+    key up (or down, for the largest): ``FleetBucket`` pads to its member
+    maxima anyway, and a lone host is cheaper padded into a neighbor's
+    layout than carrying its own compiled scan."""
+    keys = list(keys)
+    while len(keys) > 1:
+        lone = next((key for key in keys if len(groups[key]) == 1), None)
+        if lone is None:
+            break
+        i = keys.index(lone)
+        into = keys[i + 1] if i + 1 < len(keys) else keys[i - 1]
+        groups[into] = sorted(groups[into] + groups.pop(lone))
+        keys.remove(lone)
+    return keys, groups
+
+
+def _layout_work(problem: "SolverProblem", rows: Sequence[Sequence[int]]
+                 ) -> int:
+    """Padded-solve work proxy for one shared layout: rows x (power-of-two
+    service ceiling x relation ceiling)."""
+    s = max(len(svcs) for svcs in rows)
+    r = max(sum(len(problem.specs[i].relation_features) for i in svcs)
+            for svcs in rows)
+    return len(rows) * layout_bucket(s) * layout_bucket(r)
+
+
+def _auto_single_layout(problem: "SolverProblem",
+                        groups_rows: Sequence[Sequence[Sequence[int]]]
+                        ) -> bool:
+    """Static tiny-fleet threshold: collapse to the single shared layout
+    when every bucket is small (< ``_AUTO_BUCKET_MIN_HOSTS`` rows) and the
+    padding a shared layout wastes stays within ``_AUTO_PAD_FACTOR`` of the
+    bucketed work.  Pure function of the layout counts — no timing."""
+    if len(groups_rows) <= 1:
+        return False
+    if max(len(rows) for rows in groups_rows) >= _AUTO_BUCKET_MIN_HOSTS:
+        return False
+    all_rows = [svcs for rows in groups_rows for svcs in rows]
+    single = _layout_work(problem, all_rows)
+    split = sum(_layout_work(problem, rows) for rows in groups_rows)
+    return single <= _AUTO_PAD_FACTOR * split
+
+
+class FleetBucket:
+    """One padded per-row layout shared by a group of like-sized subproblems.
+
+    Holds the batched ``ProblemTables`` (leading axis = rows in the bucket,
     padded to the bucket's member maxima), the gather tables mapping the
-    global problem into host-local slots, and the inverse maps used to
-    scatter solved per-host vectors back into the global decision vector.
+    global problem into row-local slots, and the inverse maps used to
+    scatter solved per-row vectors back into the global decision vector.
+
+    A row is *any* service subset with its own capacity: a host's residents
+    (``FleetSolverProblem`` — rows partition the services) or a placement
+    what-if candidate (``PlacementProblem`` — rows OVERLAP, the same service
+    appears in several candidate subsets).  All local index maps are built
+    per row, so overlap is safe; the scatter-back maps (``g_idx``/``join``)
+    are only meaningful for partitioned rows.
     """
 
     def __init__(self, problem: SolverProblem, hosts: Sequence[str],
@@ -595,11 +667,21 @@ class FleetBucket:
             max(sum(len(problem.specs[i].relation_features) for i in svcs)
                 for svcs in svc_of_host))
 
-        # decision-vector layout: host-local slots <-> global indices
+        # decision-vector layout: row-local slots <-> global indices
         dims = [sum(problem.specs[i].n_params for i in svcs)
                 for svcs in svc_of_host]
         d_max = max(dims)
         self.dim = int(sum(dims))          # real (unpadded) params covered
+        svc_sets = [set(svcs) for svcs in svc_of_host]
+        # relation/SLO membership per row, in global order
+        rel_rows = [[r for r, (i, *_rest) in enumerate(problem.relations)
+                     if i in ss] for ss in svc_sets]
+        slo_rows = [[q for q, i in enumerate(problem._slo_service)
+                     if int(i) in ss] for ss in svc_sets]
+        r_max = max(max((len(v) for v in rel_rows), default=1), 1)
+        q_max = max(max((len(v) for v in slo_rows), default=1), 1)
+        f_max = problem._rel_gather.shape[1]
+
         param_take = np.zeros((B, d_max), np.int64)
         lower = np.zeros((B, d_max), np.float32)
         upper = np.zeros((B, d_max), np.float32)   # padded slots pin to 0
@@ -607,13 +689,25 @@ class FleetBucket:
         g_idx = np.zeros(self.dim, np.int64)       # global param indices
         loc_b = np.zeros(self.dim, np.int64)       # -> bucket row
         loc_d = np.zeros(self.dim, np.int64)       # -> local slot
-        g2slot = np.zeros(problem.dim, np.int64)
-        svc_local = np.zeros(len(problem.specs), np.int64)
+        rel_take = np.zeros((B, r_max), np.int64)
+        rel_valid = np.zeros((B, r_max), np.float32)
+        rel_gather = np.zeros((B, r_max, f_max), np.int32)
+        kind = np.zeros((B, q_max), np.int32)
+        svc = np.zeros((B, q_max), np.int32)
+        weight = np.zeros((B, q_max), np.float32)
+        target = np.ones((B, q_max), np.float32)   # pad 1.0: no divide-by-0
+        pidx = np.zeros((B, q_max), np.int32)
+        ridx = np.zeros((B, q_max), np.int32)
+        svc_take_np = np.zeros((B, self.n_services_max), np.int64)
+
         k = 0
         for b, svcs in enumerate(svc_of_host):
+            svc_local: Dict[int, int] = {}    # per-row: rows may overlap
+            g2slot: Dict[int, int] = {}
             d = 0
             for si, i in enumerate(svcs):
                 svc_local[i] = si
+                svc_take_np[b, si] = i
                 for j in range(problem.specs[i].n_params):
                     g = problem.offsets[i] + j
                     param_take[b, d] = g
@@ -624,52 +718,25 @@ class FleetBucket:
                     g2slot[g] = d
                     k += 1
                     d += 1
-
-        # relations: per-host rows gathered out of the global stack
-        rel_of_host: List[List[int]] = [[] for _ in range(B)]
-        svc_to_b = {i: b for b, svcs in enumerate(svc_of_host) for i in svcs}
-        for r, (i, *_rest) in enumerate(problem.relations):
-            if i in svc_to_b:
-                rel_of_host[svc_to_b[i]].append(r)
-        r_max = max(max((len(v) for v in rel_of_host), default=1), 1)
-        f_max = problem._rel_gather.shape[1]
-        rel_take = np.zeros((B, r_max), np.int64)
-        rel_valid = np.zeros((B, r_max), np.float32)
-        rel_gather = np.zeros((B, r_max, f_max), np.int32)
-        rel_local = np.zeros(max(len(problem.relations), 1), np.int64)
-        for b, rels in enumerate(rel_of_host):
-            for rl, r in enumerate(rels):
+            rel_local: Dict[int, int] = {}
+            for rl, r in enumerate(rel_rows[b]):
                 rel_take[b, rl] = r
                 rel_valid[b, rl] = 1.0
                 rel_local[r] = rl
-                rel_gather[b, rl] = g2slot[problem._rel_gather[r]]
-
-        # SLOs: per-host subset of the global phi table, weight-0 padding
-        slo_of_host: List[List[int]] = [[] for _ in range(B)]
-        for q, i in enumerate(problem._slo_service):
-            if int(i) in svc_to_b:
-                slo_of_host[svc_to_b[int(i)]].append(q)
-        q_max = max(max((len(v) for v in slo_of_host), default=1), 1)
-        kind = np.zeros((B, q_max), np.int32)
-        svc = np.zeros((B, q_max), np.int32)
-        weight = np.zeros((B, q_max), np.float32)
-        target = np.ones((B, q_max), np.float32)   # pad 1.0: no divide-by-0
-        pidx = np.zeros((B, q_max), np.int32)
-        ridx = np.zeros((B, q_max), np.int32)
-        for b, qs in enumerate(slo_of_host):
-            for ql, q in enumerate(qs):
+                # padded feature slots in the global gather re-read global
+                # index 0 (their exponent is 0 -> factor 1), which may not
+                # belong to this row: local slot 0 is equally harmless
+                rel_gather[b, rl] = [g2slot.get(int(g), 0)
+                                     for g in problem._rel_gather[r]]
+            for ql, q in enumerate(slo_rows[b]):
                 kind[b, ql] = problem._slo_kind[q]
-                svc[b, ql] = svc_local[problem._slo_service[q]]
+                svc[b, ql] = svc_local[int(problem._slo_service[q])]
                 weight[b, ql] = problem._slo_weight[q]
                 target[b, ql] = problem._slo_target[q]
-                pidx[b, ql] = g2slot[problem._slo_pidx[q]]
-                ridx[b, ql] = rel_local[problem._slo_ridx[q]]
-
-        # per-problem rps gather: host-local service slot -> global service
-        svc_take_np = np.zeros((B, self.n_services_max), np.int64)
-        for b, svcs in enumerate(svc_of_host):
-            for si, i in enumerate(svcs):
-                svc_take_np[b, si] = i
+                # pidx/ridx are only read for their kind; foreign indices
+                # (kind-0 slots of kind-1/2 SLOs and vice versa) pin to 0
+                pidx[b, ql] = g2slot.get(int(problem._slo_pidx[q]), 0)
+                ridx[b, ql] = rel_local.get(int(problem._slo_ridx[q]), 0)
 
         self.tables = ProblemTables(
             lower=jnp.asarray(lower), upper=jnp.asarray(upper),
@@ -735,11 +802,18 @@ class FleetSolverProblem:
     """
 
     def __init__(self, problem: SolverProblem, host_of: Mapping[str, str],
-                 capacities: Mapping[str, float], bucketed: bool = True):
+                 capacities: Mapping[str, float],
+                 bucketed: Union[bool, str] = "auto"):
         """``host_of``: service name (spec.name) -> host name;
         ``capacities``: host name -> resource budget C_h;
+        ``bucketed=True`` keeps one bucket per power-of-two layout key;
         ``bucketed=False`` forces the single-shared-layout path (every host
-        padded to the fleet maximum) — the e6 baseline and parity oracle."""
+        padded to the fleet maximum) — the e6 baseline and parity oracle;
+        ``"auto"`` (default) buckets but merges single-member buckets into
+        a neighboring layout and collapses tiny fleets (every bucket below
+        ``_AUTO_BUCKET_MIN_HOSTS`` hosts, little padding to save) to the
+        single shared layout — at those sizes the per-bucket compiled scan
+        costs more on XLA-CPU than the padding it avoids."""
         self.problem = problem
         self.bucketed = bucketed
         self.hosts: Tuple[str, ...] = tuple(sorted(
@@ -754,19 +828,27 @@ class FleetSolverProblem:
         self.n_services_max = max(len(v) for v in svc_of_host)
 
         # bucket assignment: a pure function of each host's own layout
+        # (auto merging regroups *buckets*, never this per-host key)
         self.bucket_of: Dict[str, Tuple[int, int]] = {
             h: bucket_key(len(svcs),
                           sum(len(problem.specs[i].relation_features)
                               for i in svcs))
             for h, svcs in zip(self.hosts, svc_of_host)}
-        if bucketed:
-            groups: Dict[Tuple[int, int], List[int]] = {}
+        if bucketed is False:
+            groups: Dict[Tuple[int, int], List[int]] = \
+                {(0, 0): list(range(len(self.hosts)))}
+            keys = [(0, 0)]
+        else:
+            groups = {}
             for b, h in enumerate(self.hosts):
                 groups.setdefault(self.bucket_of[h], []).append(b)
             keys = sorted(groups)          # deterministic bucket order
-        else:
-            groups = {(0, 0): list(range(len(self.hosts)))}
-            keys = [(0, 0)]
+            if bucketed == "auto":
+                keys, groups = _merge_singleton_groups(keys, groups)
+                if _auto_single_layout(problem, [
+                        [svc_of_host[b] for b in groups[k]] for k in keys]):
+                    groups = {(0, 0): list(range(len(self.hosts)))}
+                    keys = [(0, 0)]
         self.buckets: List[FleetBucket] = [
             FleetBucket(problem, [self.hosts[b] for b in groups[k]],
                         groups[k], [svc_of_host[b] for b in groups[k]],
@@ -774,9 +856,14 @@ class FleetSolverProblem:
             for k in keys]
 
         # topology fingerprint: callers caching compiled pipelines key on
-        # this, so a rebalance-migrated fleet never reuses a stale trace
-        self.layout_key: tuple = (bucketed, tuple(
-            (h, tuple(svc_of_host[b])) for b, h in enumerate(self.hosts)))
+        # this, so a rebalance-migrated fleet never reuses a stale trace.
+        # The RESOLVED bucket structure and the per-host capacities are part
+        # of it — capacity degradation mid-run must not reuse a trace whose
+        # budget constants were baked in at the old values.
+        self.layout_key: tuple = (
+            tuple(tuple(bk.hosts) for bk in self.buckets),
+            tuple((h, tuple(svc_of_host[b]), float(self.capacities[b]))
+                  for b, h in enumerate(self.hosts)))
 
         # scatter permutations: concat of per-bucket outputs -> global order
         self._join_perm = jnp.asarray(np.argsort(np.concatenate(
@@ -896,3 +983,149 @@ class FleetSolverProblem:
         a = rng.uniform(self.problem.lower,
                         self.problem.upper).astype(np.float32)
         return np.asarray(self._project_many(jnp.asarray(a)))
+
+
+class PlacementProblem:
+    """Candidate-batched placement scoring — every (service, host) what-if
+    subset solved in ONE jitted dispatch.
+
+    ``RASKAgent.placement_scores`` needs, per host h, the best predicted
+    fulfillment of h's residents with and without each candidate service
+    under h's own budget — O(|S| x |H|) subset solves per snapshot.  The
+    PR-4 implementation looped them through per-subset ``SolverProblem``s
+    (one ``pgd_solve`` dispatch each, ~seconds cold), which is why
+    rebalancing ran as an occasional out-of-band pass.  Here every candidate
+    — a subset of global spec indices plus a capacity — becomes one row of a
+    ``FleetBucket``-padded batch (the PR-4 power-of-two layout machinery,
+    except rows now OVERLAP: the same service is scored on several hosts)
+    and one vmapped ``pgd_solve`` per layout bucket scores the whole
+    candidate set in a single jitted dispatch, cheap enough to run every
+    decide cycle (``RaskConfig(rebalance_every=N)``).
+
+    ``scores_sequential`` is the brute-force parity oracle: the same padded
+    tables and per-candidate PRNG keys, one dispatch per candidate — the
+    batched path must match it to <= 1e-5 (tests/test_placement.py) and the
+    e8 benchmark times the two against each other.  Empty subsets score 0.0
+    without a solve, like the old per-subset oracle.
+    """
+
+    def __init__(self, problem: SolverProblem,
+                 subsets: Sequence[Sequence[int]],
+                 capacities: Sequence[float],
+                 bucketed: Union[bool, str] = "auto"):
+        self.problem = problem
+        self.subsets: List[Tuple[int, ...]] = [
+            tuple(int(i) for i in s) for s in subsets]
+        self.capacities = np.asarray(capacities, np.float32)
+        self.n_candidates = len(self.subsets)
+        rows = [k for k, s in enumerate(self.subsets) if s]
+        if bucketed is False:
+            groups: Dict[Tuple[int, int], List[int]] = \
+                {(0, 0): rows} if rows else {}
+            keys = list(groups)
+        else:
+            groups = {}
+            for k in rows:
+                s = self.subsets[k]
+                key = bucket_key(len(s), sum(
+                    len(problem.specs[i].relation_features) for i in s))
+                groups.setdefault(key, []).append(k)
+            keys = sorted(groups)
+            if bucketed == "auto":
+                keys, groups = _merge_singleton_groups(keys, groups)
+        self.buckets: List[FleetBucket] = [
+            FleetBucket(problem, [f"cand{k}" for k in groups[key]],
+                        groups[key],
+                        [list(self.subsets[k]) for k in groups[key]],
+                        self.capacities[groups[key]])
+            for key in keys]
+        self._order = np.concatenate(
+            [bk.host_idx for bk in self.buckets]) if self.buckets \
+            else np.zeros(0, np.int64)
+        self._fns: Dict[tuple, callable] = {}
+        self._seq_fns: Dict[tuple, callable] = {}
+
+    def scores_tracer(self, solve, x0g, key, sm, rps):
+        """Trace-context candidate scoring (composable into larger jitted
+        pipelines): one vmapped ``solve`` per layout bucket.  Returns the
+        per-bucket concatenated scores — candidate order is ``_order``;
+        ``scores`` does the scatter host-side."""
+        keys = jax.random.split(key, max(self.n_candidates, 1))
+        parts = []
+        for bk in self.buckets:
+            _, sc = jax.vmap(partial(solve, n_services=bk.n_services_max))(
+                bk.split(x0g), keys[bk.host_idx], bk.tables,
+                bk.gather_models(sm), rps[bk.svc_take], bk.caps)
+            parts.append(sc)
+        return jnp.concatenate(parts) if parts \
+            else jnp.zeros((0,), jnp.float32)
+
+    def _fn(self, n_starts: int, iters: int, lr: float, objective_impl: str,
+            interpret: bool):
+        key = (n_starts, iters, lr, objective_impl, interpret)
+
+        def build():
+            solve = partial(pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
+                            objective_impl=objective_impl,
+                            interpret=interpret)
+
+            def run(x0g, key, sm, rps_g):
+                return self.scores_tracer(solve, x0g, key, sm, rps_g)
+
+            return jax.jit(run)
+
+        return cached_fn(self._fns, key, build)
+
+    def scores(self, models: Models, rps, x0, *, n_starts: int = 6,
+               iters: int = 32, lr: float = 0.18, seed: int = 0,
+               objective_impl: str = "reference",
+               interpret: bool = False) -> np.ndarray:
+        """Best predicted weighted fulfillment of every candidate subset
+        under its own capacity, in candidate order — one jitted dispatch
+        for the whole batch."""
+        out = np.zeros(self.n_candidates, np.float64)
+        if not self.buckets:
+            return out
+        sm = self.problem.stack(models)
+        fn = self._fn(n_starts, iters, lr, objective_impl, interpret)
+        sc = fn(jnp.asarray(x0, jnp.float32), jax.random.PRNGKey(seed), sm,
+                jnp.asarray(rps, jnp.float32))
+        out[self._order] = np.asarray(sc, np.float64)
+        return out
+
+    def scores_sequential(self, models: Models, rps, x0, *,
+                          n_starts: int = 6, iters: int = 32,
+                          lr: float = 0.18, seed: int = 0,
+                          objective_impl: str = "reference",
+                          interpret: bool = False) -> np.ndarray:
+        """The brute-force oracle: one ``pgd_solve`` dispatch per candidate
+        on the same padded tables and PRNG keys as the batched path (the
+        PR-4 scorer's cost shape) — the parity baseline ``scores`` must
+        reproduce and the e8 benchmark's timing reference."""
+        out = np.zeros(self.n_candidates, np.float64)
+        if not self.buckets:
+            return out
+        sm = self.problem.stack(models)
+        keys = jax.random.split(jax.random.PRNGKey(seed),
+                                max(self.n_candidates, 1))
+        x0g = jnp.asarray(x0, jnp.float32)
+        rps = jnp.asarray(rps, jnp.float32)
+        for bi, bk in enumerate(self.buckets):
+            fn = cached_fn(
+                self._seq_fns,
+                (bi, n_starts, iters, lr, objective_impl, interpret),
+                lambda: jax.jit(partial(
+                    pgd_solve, n_starts=n_starts, iters=iters, lr=lr,
+                    n_services=self.buckets[bi].n_services_max,
+                    objective_impl=objective_impl, interpret=interpret)),
+                size=max(_PGD_CACHE_SIZE, 2 * len(self.buckets)))
+            X0 = bk.split(x0g)
+            smb = bk.gather_models(sm)
+            rpsb = rps[bk.svc_take]
+            for j in range(len(bk.hosts)):
+                row = jax.tree_util.tree_map(lambda x: x[j], bk.tables)
+                _, s_j = fn(X0[j], keys[int(bk.host_idx[j])], row,
+                            jax.tree_util.tree_map(lambda x: x[j], smb),
+                            rpsb[j], bk.caps[j])
+                out[int(bk.host_idx[j])] = float(s_j)
+        return out

@@ -1,14 +1,17 @@
 from .profiles import (CV_PROFILE, PC_PROFILE, QR_PROFILE, ServiceProfile,
                        lm_profile, paper_knowledge, paper_profiles)
-from .scenarios import (HostSpec, hetero_environment, hetero_knowledge,
-                        mixed_patterns, tiered_hosts, two_tier_environment,
+from .scenarios import (HostSpec, churn_scenario, failover_scenario,
+                        hetero_environment, hetero_knowledge, mixed_patterns,
+                        parse_churn, tiered_hosts, two_tier_environment,
                         two_tier_hosts)
-from .simulator import ContainerPool, EdgeEnvironment, SimulatedService
+from .simulator import ChurnEvent, ContainerPool, EdgeEnvironment, \
+    SimulatedService
 from .workloads import bursty, constant, diurnal
 
 __all__ = ["ServiceProfile", "QR_PROFILE", "CV_PROFILE", "PC_PROFILE",
            "lm_profile", "paper_profiles", "paper_knowledge",
-           "ContainerPool", "EdgeEnvironment", "SimulatedService", "bursty",
-           "constant", "diurnal", "HostSpec", "hetero_environment",
-           "hetero_knowledge", "mixed_patterns", "tiered_hosts",
-           "two_tier_environment", "two_tier_hosts"]
+           "ChurnEvent", "ContainerPool", "EdgeEnvironment",
+           "SimulatedService", "bursty", "constant", "diurnal", "HostSpec",
+           "churn_scenario", "failover_scenario", "hetero_environment",
+           "hetero_knowledge", "mixed_patterns", "parse_churn",
+           "tiered_hosts", "two_tier_environment", "two_tier_hosts"]

@@ -28,7 +28,7 @@ from typing import Dict, List, Mapping, Sequence, Tuple
 
 from .profiles import CV_PROFILE, PC_PROFILE, QR_PROFILE, ServiceProfile, \
     paper_profiles
-from .simulator import EdgeEnvironment
+from .simulator import ChurnEvent, EdgeEnvironment
 from .workloads import Pattern, bursty, constant, diurnal
 
 
@@ -104,3 +104,82 @@ def two_tier_environment(duration_s: float = 1800.0, seed: int = 0
                           replicas=2, seed=seed, hosts=two_tier_hosts(),
                           placement="capacity")
     return env, hetero_knowledge(profiles)
+
+
+# -- churn scenarios: the fleet changing mid-run ------------------------------
+
+def failover_scenario(duration_s: float = 1200.0, seed: int = 0,
+                      fail_at: float = None, kind: str = "drain_host",
+                      host: str = "hub-0"
+                      ) -> Tuple[EdgeEnvironment, Dict, List[ChurnEvent]]:
+    """The seeded failover world of e8 and the e2e tests: the 9-service
+    camera/hub/gateway fleet of ``hetero_environment`` plus one scripted
+    outage of ``host`` at ``fail_at`` (default: 60% through the run).  On
+    the event the hub's residents are evacuated via the agent's batched
+    placement scores onto the surviving devices — with their telemetry
+    windows when ``kind="drain_host"``, without when ``"fail_host"`` — and
+    the agent re-binds to the 2-device topology.  Returns (environment,
+    knowledge-for-RASK, events)."""
+    env, knowledge = hetero_environment(duration_s=duration_s, seed=seed)
+    t = float(fail_at) if fail_at is not None else round(0.6 * duration_s)
+    return env, knowledge, [ChurnEvent(t=t, kind=kind, host=host)]
+
+
+def churn_scenario(duration_s: float = 1800.0, seed: int = 0
+                   ) -> Tuple[EdgeEnvironment, Dict, List[ChurnEvent]]:
+    """Mixed mid-run churn on the tiered fleet: the gateway loses 40% of
+    its capacity (thermal throttling), a new QR container arrives, and one
+    original service departs — arrival/departure re-enter a short
+    exploration phase while the new relations gather >= 3 rows, exactly
+    like the initial xi phase."""
+    env, knowledge = hetero_environment(duration_s=duration_s, seed=seed)
+    victim = sorted(env.platform.services())[0]
+    events = [
+        ChurnEvent(t=round(0.35 * duration_s), kind="degrade",
+                   host="gateway-0", factor=0.6),
+        ChurnEvent(t=round(0.55 * duration_s), kind="arrive",
+                   profile=QR_PROFILE),
+        ChurnEvent(t=round(0.75 * duration_s), kind="depart",
+                   service=victim),
+    ]
+    return env, knowledge, events
+
+
+def parse_churn(spec: str, profiles: Sequence[ServiceProfile] = ()
+                ) -> List[ChurnEvent]:
+    """CLI churn grammar (``launch/autoscale --churn``): a comma-separated
+    list of ``kind:arg@t[:extra]`` items —
+
+      * ``fail:HOST@T`` / ``drain:HOST@T`` — abrupt / graceful host outage;
+      * ``degrade:HOST@T:FACTOR``          — capacity x FACTOR (default 0.5);
+      * ``arrive:TYPE@T``                  — a new container of profile TYPE;
+      * ``depart:SID@T``                   — service SID leaves.
+
+    ``T`` is absolute simulation seconds.  Events come back time-sorted.
+    """
+    by_type = {p.type: p for p in profiles}
+    out: List[ChurnEvent] = []
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        head, sep, tail = item.partition("@")
+        kind, _, arg = head.partition(":")
+        if not sep or not arg:
+            raise ValueError(f"churn item {item!r} is not kind:arg@t[:extra]")
+        t_str, _, extra = tail.partition(":")
+        t = float(t_str)
+        if kind in ("fail", "fail_host"):
+            out.append(ChurnEvent(t=t, kind="fail_host", host=arg))
+        elif kind in ("drain", "drain_host"):
+            out.append(ChurnEvent(t=t, kind="drain_host", host=arg))
+        elif kind == "degrade":
+            out.append(ChurnEvent(t=t, kind="degrade", host=arg,
+                                  factor=float(extra) if extra else 0.5))
+        elif kind == "arrive":
+            if arg not in by_type:
+                raise KeyError(f"arrive: unknown profile type {arg!r} "
+                               f"(have {sorted(by_type)})")
+            out.append(ChurnEvent(t=t, kind="arrive", profile=by_type[arg]))
+        elif kind == "depart":
+            out.append(ChurnEvent(t=t, kind="depart", service=arg))
+        else:
+            raise ValueError(f"unknown churn kind {kind!r} in {item!r}")
+    return sorted(out, key=lambda e: e.t)

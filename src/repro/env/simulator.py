@@ -287,6 +287,36 @@ class CycleRecord:
     compile_s: float = 0.0                # first-solve jit compile time
 
 
+@dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    """One scripted mid-run fleet change, applied by ``EdgeEnvironment.run``
+    when the simulation clock reaches ``t`` (absolute seconds).
+
+    Kinds:
+      * ``"fail_host"``  — abrupt host loss: residents evacuated to the best
+        other hosts via the agent's batched placement scores (least-loaded
+        fallback), the host's telemetry DB lost with it, host removed;
+      * ``"drain_host"`` — graceful decommission: same evacuation, but each
+        service's telemetry window migrates with it;
+      * ``"degrade"``    — host capacity multiplied by ``factor`` (use > 1 to
+        model recovery);
+      * ``"arrive"``     — a new service container from ``profile`` placed on
+        ``host`` (or the least-loaded device), fed by ``pattern``;
+      * ``"depart"``     — service ``service`` leaves the fleet.
+
+    After every event the driving agent is re-bound to the new topology
+    (``refresh_topology``) before its next cycle.
+    """
+
+    t: float
+    kind: str
+    host: str = ""
+    service: str = ""
+    factor: float = 1.0
+    profile: Optional[ServiceProfile] = None
+    pattern: Optional[Pattern] = None
+
+
 class EdgeEnvironment:
     """One or more Edge devices: control plane + simulated services +
     request workloads.
@@ -351,6 +381,8 @@ class EdgeEnvironment:
         self.services: Dict[str, SimulatedService] = {}
         self.patterns: Dict[str, Pattern] = {}
         rng = np.random.default_rng(seed)
+        self._rng = rng                     # churn arrivals draw from it too
+        self._routes: Optional[List[tuple]] = None   # rebuilt after churn
         n_total = len(profiles) * replicas
         assign = self._placements(placement, hostnames, n_total)
         # each container starts with an equal share of its *device's*
@@ -385,6 +417,7 @@ class EdgeEnvironment:
                 self.services[key] = backend
                 pat = (patterns or {}).get(profile.type)
                 self.patterns[key] = pat if pat else constant(profile.default_rps)
+        self._instance_of = instance_of     # per-type numbering continues
         self.t = 0.0
 
     def _placements(self, placement, hostnames: List[str],
@@ -440,6 +473,103 @@ class EdgeEnvironment:
             return 1.0, per_service
         return float(global_fulfillment(metrics_list, slo_list)), per_service
 
+    # -- churn: the fleet changing underneath the agent --------------------------
+    def evacuate_host(self, name: str, agent=None,
+                      carry_telemetry: bool = True
+                      ) -> List[Tuple[str, str, str]]:
+        """Move every resident off device ``name`` and drop it from the
+        fleet.  Destinations come from the agent's candidate-batched
+        ``placement_scores`` when it exposes them (one dispatch scores all
+        (service, host) pairs; the failed host's column is ignored), with a
+        least-loaded fallback per unscored service.  Returns the moves."""
+        if not isinstance(self.platform, Fleet):
+            raise ValueError("host churn needs a multi-host Fleet")
+        scores = {}
+        if agent is not None and hasattr(agent, "placement_scores"):
+            scores = agent.placement_scores()
+        moves = self.platform.evacuate(name, scores,
+                                       carry_telemetry=carry_telemetry)
+        self.platform.remove_host(name)
+        self.host_capacity.pop(name, None)
+        return moves
+
+    def degrade_host(self, name: str, factor: float) -> Dict[str, float]:
+        """Scale every resource budget of device ``name`` by ``factor``
+        (< 1: thermal throttling / co-tenant pressure; > 1: recovery).
+        Existing holdings shrink on the next applied plan's arbitration."""
+        caps = self.host_capacity[name]
+        for res in list(caps):
+            caps[res] = caps[res] * float(factor)
+            if isinstance(self.platform, Fleet):
+                self.platform.set_capacity(name, res, caps[res])
+            else:
+                self.platform.capacity[res] = caps[res]
+        return dict(caps)
+
+    def add_service(self, profile: ServiceProfile,
+                    pattern: Optional[Pattern] = None,
+                    host: Optional[str] = None) -> str:
+        """A new service container arrives mid-run: registered on ``host``
+        (default: least-loaded), simulated in the shared pool, fed by
+        ``pattern`` (default: the profile's constant rate).  Returns the
+        sid.  The agent refits once the newcomer has >= 3 observed cycles
+        (until then it re-enters exploration, like the initial xi phase)."""
+        c = self._instance_of.get(profile.type, 0)
+        self._instance_of[profile.type] = c + 1
+        backend = SimulatedService(
+            profile, np.random.default_rng(self._rng.integers(2 ** 31)),
+            pool=self.pool)
+        defaults = dict(profile.defaults)
+        if isinstance(self.platform, Fleet):
+            # pick the device first so the sid carries its real host name
+            host = host or self.platform._least_loaded()
+            sid = ServiceId(host, profile.type, f"c{c}")
+            self.platform.place(sid, profile.api, backend,
+                                list(profile.slos), defaults, host=host)
+        else:
+            sid = ServiceId(self.platform.host, profile.type, f"c{c}")
+            self.platform.register(sid, profile.api, backend,
+                                   list(profile.slos), defaults)
+        key = str(sid)
+        self.services[key] = backend
+        self.patterns[key] = pattern if pattern \
+            else constant(profile.default_rps)
+        self._routes = None
+        return key
+
+    def remove_service(self, sid: str) -> None:
+        """A service departs mid-run: deregistered (holdings released), its
+        workload stops; the pooled container idles at zero load (pool slots
+        are append-only)."""
+        key = str(sid)
+        backend = self.services.pop(key)
+        self.platform.deregister(key)
+        self.patterns.pop(key, None)
+        self.pool.rps[backend.i] = 0.0
+        self.pool.queue[backend.i] = 0.0
+        self._routes = None
+
+    def apply_event(self, ev: ChurnEvent, agent=None) -> None:
+        """Apply one scripted churn event, then re-bind the agent
+        (``refresh_topology``) so its next cycle decides against the new
+        topology."""
+        if ev.kind in ("fail_host", "drain_host"):
+            self.evacuate_host(ev.host, agent,
+                               carry_telemetry=(ev.kind == "drain_host"))
+        elif ev.kind == "degrade":
+            self.degrade_host(ev.host, ev.factor)
+        elif ev.kind == "arrive":
+            if ev.profile is None:
+                raise ValueError("arrive event needs a profile")
+            self.add_service(ev.profile, pattern=ev.pattern,
+                             host=ev.host or None)
+        elif ev.kind == "depart":
+            self.remove_service(ev.service)
+        else:
+            raise ValueError(f"unknown churn event kind {ev.kind!r}")
+        if agent is not None and hasattr(agent, "refresh_topology"):
+            agent.refresh_topology()
+
     # -- one agent cycle through the unified protocol ---------------------------
     def _drive(self, agent) -> CycleResult:
         """observe -> decide -> apply_plan for ``Agent``s; legacy agents
@@ -456,15 +586,27 @@ class EdgeEnvironment:
 
     # -- main loop ----------------------------------------------------------------
     def run(self, agent, duration_s: float, cycle_s: float = 10.0,
-            on_cycle: Optional[Callable] = None) -> List[CycleRecord]:
+            on_cycle: Optional[Callable] = None,
+            events: Optional[Sequence[ChurnEvent]] = None
+            ) -> List[CycleRecord]:
+        """``events``: scripted churn (absolute ``t`` on the environment
+        clock), applied just before the tick that reaches their time;
+        events already in the past fire on the first step."""
         history: List[CycleRecord] = []
         steps = int(duration_s)
+        pending = sorted(events or [], key=lambda e: e.t)
         # (pool index, pattern) per container — indexing by the backend's own
-        # pool slot, not dict position, so extra pool tenants cannot skew it
-        routes = [(b.i, self.patterns[k]) for k, b in self.services.items()]
+        # pool slot, not dict position, so extra pool tenants cannot skew it;
+        # rebuilt whenever churn changes the service set
+        self._routes = None
         for step in range(1, steps + 1):
             self.t += 1.0
-            for j, pat in routes:                # workloads are opaque callables
+            while pending and pending[0].t <= self.t:
+                self.apply_event(pending.pop(0), agent)
+            if self._routes is None:
+                self._routes = [(b.i, self.patterns[k])
+                                for k, b in self.services.items()]
+            for j, pat in self._routes:          # workloads are opaque callables
                 self.pool.rps[j] = pat(self.t)
             self.pool.tick(self.t)               # whole fleet, one batched step
             self.platform.scrape(self.t)

@@ -15,9 +15,17 @@ With ``--hosts N`` the pod budget is split over N devices behind a ``Fleet``
 heterogeneous fleet: services are placed proportionally to each device's
 budget and the solver groups the unequal hosts into layout buckets.
 
+``--rebalance-every N`` turns on the per-cycle placement stage (one
+candidate-batched score snapshot + at most one migration every N cycles)
+and ``--churn`` scripts mid-run fleet changes (host failure/drain with
+scorer-driven evacuation, capacity degradation, service arrival/departure
+— see ``env.scenarios.parse_churn`` for the grammar).
+
     PYTHONPATH=src python -m repro.launch.autoscale --minutes 10
     PYTHONPATH=src python -m repro.launch.autoscale --hosts 3 --replicas 3
     PYTHONPATH=src python -m repro.launch.autoscale --host-caps 4,8,20 --replicas 3
+    PYTHONPATH=src python -m repro.launch.autoscale --host-caps 4,8,20 \
+        --replicas 3 --rebalance-every 3 --churn "fail:edge-1@420"
 """
 from __future__ import annotations
 
@@ -64,6 +72,19 @@ def main(argv=None):
                          "--hosts/--chips splitting")
     ap.add_argument("--replicas", type=int, default=1,
                     help="containers per LM service type")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="per-cycle placement stage: every N post-"
+                         "exploration cycles one batched placement-score "
+                         "snapshot and at most one migration (0 = off)")
+    ap.add_argument("--churn", default=None,
+                    help="scripted mid-run fleet changes, e.g. "
+                         "'fail:edge-1@420,degrade:edge-0@300:0.5,"
+                         "arrive:gemma3-1b@500,depart:SID@700' "
+                         "(env.scenarios.parse_churn grammar)")
+    ap.add_argument("--adapt-budget", action="store_true",
+                    help="online solver budget adaptation (shrink PGD "
+                         "iters/starts at steady state, restore on load "
+                         "shifts)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -93,8 +114,15 @@ def main(argv=None):
     knowledge = {p.type: dict(p.knowledge) for p in profiles}
     agent = RASKAgent(env.platform, knowledge,
                       RaskConfig(xi=20, eta=0.0, backend=args.backend,
-                                 resource="chips"), seed=args.seed)
-    hist = env.run(agent, duration_s=duration)
+                                 resource="chips",
+                                 rebalance_every=args.rebalance_every,
+                                 adapt_budget=args.adapt_budget),
+                      seed=args.seed)
+    events = None
+    if args.churn:
+        from ..env import parse_churn
+        events = parse_churn(args.churn, profiles)
+    hist = env.run(agent, duration_s=duration, events=events)
     f = [h.fulfillment for h in hist]
     post = f[agent.cfg.xi:]
     capacity_clips = sum(

@@ -1,0 +1,101 @@
+"""Candidate-batched placement scoring (``core.solver.PlacementProblem``).
+
+ISSUE 5 satellite gates: hypothesis parity between the one-dispatch batched
+scorer and the brute-force per-candidate oracle (same scores to 1e-5, same
+argmax candidate), overlap/empty-subset handling, and the auto bucket
+merging shared with the fleet solve.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: skip module if absent
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regression import fit_polynomial
+from repro.core.slo import SLO
+from repro.core.solver import PlacementProblem, ServiceSpec, SolverProblem
+
+
+def _specs(n):
+    return [ServiceSpec(
+        name=f"s{i}", param_names=("cores", "quality"),
+        lower=(0.1, 100.0), upper=(8.0, 1000.0),
+        resource_mask=(True, False),
+        slos=(SLO("quality", 800.0, 0.5), SLO("completion", 1.0, 1.0)),
+        relation_features=(("tp_max", (0, 1)),)) for i in range(n)]
+
+
+_PROBLEM = SolverProblem(_specs(6))
+
+
+def _models():
+    rng = np.random.default_rng(0)
+    X = np.c_[rng.uniform(0.1, 8, 200), rng.uniform(100, 1000, 200)]
+    Y = 20 * X[:, 0] - X[:, 1] / 100.0
+    m = fit_polynomial(X.astype(np.float32), Y.astype(np.float32), 2,
+                       x_scale=[8.0, 1000.0])
+    return {s.name: {"tp_max": m} for s in _PROBLEM.specs}
+
+
+_MODELS = _models()
+
+# one fixed candidate structure (overlapping subsets, an empty one, two
+# layout buckets) -> ONE compile; hypothesis then sweeps the data inputs
+_SUBSETS = [(), (0, 1, 2), (0, 1, 2, 3), (1, 2), (3, 4, 5), (0, 3, 4, 5),
+            (4, 5), (2,)]
+_CAPS = [8.0, 8.0, 8.0, 4.0, 6.0, 6.0, 4.0, 2.0]
+_PP = PlacementProblem(_PROBLEM, _SUBSETS, _CAPS)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 16), st.floats(10.0, 120.0),
+       st.integers(0, 2 ** 16))
+def test_batched_matches_sequential_oracle(seed, load, x0_seed):
+    """Same padded tables, same per-candidate PRNG keys: the vmapped
+    dispatch and the per-candidate loop must agree to <= 1e-5, empty
+    subsets score exactly 0, and the best candidate is the same."""
+    rps = np.full(6, load, np.float32)
+    x0 = _PROBLEM.random_assignment(np.random.default_rng(x0_seed), 24.0)
+    kw = dict(n_starts=4, iters=8, seed=seed)
+    sb = _PP.scores(_MODELS, rps, x0, **kw)
+    sq = _PP.scores_sequential(_MODELS, rps, x0, **kw)
+    assert sb[0] == 0.0 and sq[0] == 0.0
+    np.testing.assert_allclose(sb, sq, atol=1e-5)
+    assert int(np.argmax(sb)) == int(np.argmax(sq))
+
+
+def test_unbucketed_candidate_batch_matches_bucketed():
+    """``bucketed=False`` (every candidate padded to the widest) optimizes
+    the same subproblems — scores agree to optimizer tolerance even though
+    the padded dims (and so the uniform start draws) differ."""
+    rps = np.full(6, 50.0, np.float32)
+    x0 = _PROBLEM.random_assignment(np.random.default_rng(1), 24.0)
+    pu = PlacementProblem(_PROBLEM, _SUBSETS, _CAPS, bucketed=False)
+    sb = _PP.scores(_MODELS, rps, x0, n_starts=4, iters=16, seed=0)
+    su = pu.scores(_MODELS, rps, x0, n_starts=4, iters=16, seed=0)
+    np.testing.assert_allclose(sb, su, atol=5e-2)
+
+
+def test_candidate_buckets_merge_singletons():
+    """Auto mode folds lone candidate layouts into a neighboring bucket
+    (same policy as the fleet solve); bucketed=True keeps them separate."""
+    subsets = [(0,), (1,), (0, 1, 2, 3, 4)]      # keys (1,1)x2 + (8,8)x1
+    caps = [2.0, 2.0, 16.0]
+    auto = PlacementProblem(_PROBLEM, subsets, caps)
+    explicit = PlacementProblem(_PROBLEM, subsets, caps, bucketed=True)
+    assert len(explicit.buckets) == 2
+    assert len(auto.buckets) == 1
+    rps = np.full(6, 50.0, np.float32)
+    x0 = _PROBLEM.random_assignment(np.random.default_rng(2), 20.0)
+    sa = auto.scores(_MODELS, rps, x0, n_starts=2, iters=4, seed=0)
+    se = auto.scores_sequential(_MODELS, rps, x0, n_starts=2, iters=4,
+                                seed=0)
+    np.testing.assert_allclose(sa, se, atol=1e-5)
+
+
+def test_all_empty_candidates_score_zero_without_solving():
+    pp = PlacementProblem(_PROBLEM, [(), ()], [4.0, 8.0])
+    assert pp.buckets == []
+    out = pp.scores(_MODELS, np.full(6, 50.0, np.float32),
+                    np.zeros(_PROBLEM.dim, np.float32))
+    np.testing.assert_array_equal(out, np.zeros(2))

@@ -100,6 +100,50 @@ def test_bucket_assignment_total_and_stable(svc_counts):
                 1 for s, hh in host_of.items() if hh == h)
 
 
+# -- auto mode: singleton merging + the tiny-fleet threshold ------------------
+
+def test_auto_merges_every_singleton_group():
+    """[8, 1, 1] hosts: the lone (8,8) layout folds into the (1,1) pair —
+    one padded batch instead of a compiled scan for a single host."""
+    problem, host_of, caps = _fleet([8, 1, 1])
+    fa = FleetSolverProblem(problem, host_of, caps)
+    ft = FleetSolverProblem(problem, host_of, caps, bucketed=True)
+    assert len(ft.buckets) == 2
+    assert len(fa.buckets) == 1
+    assert sorted(h for bk in fa.buckets for h in bk.hosts) == \
+        sorted(fa.hosts)
+    # the per-host bucket *key* stays the pure layout function regardless
+    assert fa.bucket_of == ft.bucket_of
+
+
+def test_auto_collapses_small_mixed_fleet_to_single_layout():
+    """Two small non-singleton buckets below the host threshold with
+    modest padding waste: auto picks the single shared layout."""
+    problem, host_of, caps = _fleet([2, 2, 3, 3])
+    fa = FleetSolverProblem(problem, host_of, caps)
+    ft = FleetSolverProblem(problem, host_of, caps, bucketed=True)
+    assert len(ft.buckets) == 2
+    assert len(fa.buckets) == 1
+
+
+def test_auto_keeps_buckets_past_the_host_threshold():
+    """A bucket with >= a dozen hosts amortizes its compiled scan: auto
+    keeps the bucketed structure (the e6 SOLVE_FLEET shape)."""
+    problem, host_of, caps = _fleet([2] * 12 + [8, 8])
+    fa = FleetSolverProblem(problem, host_of, caps)
+    assert len(fa.buckets) == 2
+    sizes = sorted(len(bk.hosts) for bk in fa.buckets)
+    assert sizes == [2, 12]
+
+
+def test_auto_is_identity_on_homogeneous_fleets():
+    problem, host_of, caps = _fleet([3, 3, 3])
+    fa = FleetSolverProblem(problem, host_of, caps)
+    ft = FleetSolverProblem(problem, host_of, caps, bucketed=True)
+    assert len(fa.buckets) == len(ft.buckets) == 1
+    assert fa.layout_key == ft.layout_key
+
+
 # -- homogeneous fleets: bucketed == unbucketed, byte for byte ----------------
 
 @settings(max_examples=5, deadline=None)

@@ -147,3 +147,87 @@ def test_rask_scales_nine_services_over_three_hosts():
         used = sum(host.assignment(s).get("cores", 0.0)
                    for s in host.services())
         assert used <= 8.0 + 1e-6
+
+
+# -- telemetry-carrying migrations + host churn (ISSUE 5) ---------------------
+
+def _scraped_fleet(n=2, cores=3.0):
+    fleet = two_host_fleet()
+    keys = []
+    for i in range(n):
+        sid = ServiceId("any", "qr-detector", f"c{i}")
+        fleet.place(sid, QR_PROFILE.api, FakeBackend(),
+                    list(QR_PROFILE.slos),
+                    {"cores": cores, "data_quality": 500.0}, host="edge-0")
+        keys.append(str(sid))
+    for t in range(1, 11):
+        fleet.scrape(float(t))
+    return fleet, keys
+
+
+def test_migrate_carries_telemetry_window():
+    """ISSUE 5 acceptance: windowed queries are identical across a move —
+    the ring-buffer history transfers to the destination host's DB."""
+    fleet, keys = _scraped_fleet()
+    before = {k: fleet.window_state(k, since=4.0, until=10.0) for k in keys}
+    latest = fleet.latest_metrics(keys[0])
+    fleet.migrate(keys[0], "edge-1")
+    assert fleet.window_state(keys[0], since=4.0, until=10.0) == \
+        before[keys[0]]
+    assert fleet.latest_metrics(keys[0]) == latest
+    # the source host no longer holds the series
+    src = next(h for h in fleet.hosts() if h.host == "edge-0")
+    assert src.db.latest(keys[0]) is None
+    # the unmoved service's history is untouched
+    assert fleet.window_state(keys[1], since=4.0, until=10.0) == \
+        before[keys[1]]
+    # scrapes continue seamlessly on the destination: one window spans the
+    # move (pre-move samples + post-move samples)
+    for t in range(11, 16):
+        fleet.scrape(float(t))
+    spanning = fleet.window_state(keys[0], since=8.0, until=15.0)
+    assert spanning
+
+
+def test_migrate_back_merges_history_and_failure_drops_it():
+    fleet, keys = _scraped_fleet(n=1)
+    fleet.migrate(keys[0], "edge-1")
+    for t in range(11, 14):
+        fleet.scrape(float(t))
+    fleet.migrate(keys[0], "edge-0")      # back onto its old host: merge
+    ts, _, vals = next(h for h in fleet.hosts()
+                       if h.host == "edge-0").db.export_window(keys[0])
+    assert list(ts) == [float(t) for t in range(1, 14)]   # both stints
+    assert vals.shape[0] == 13
+    assert fleet.window_state(keys[0], since=0.0)["tp"] == 1.0
+    # an abrupt failure move loses the window with the dead host's DB
+    fleet.migrate(keys[0], "edge-1", carry_telemetry=False)
+    assert fleet.window_state(keys[0], since=0.0) == {}
+
+
+def test_evacuate_uses_scores_then_least_loaded_and_remove_host():
+    fleet, keys = _scraped_fleet()
+    scores = {keys[0]: {"edge-0": 0.1, "edge-1": 0.9}}   # keys[1] unscored
+    moves = fleet.evacuate("edge-0", scores)
+    assert sorted(m[0] for m in moves) == sorted(keys)
+    assert all(dst == "edge-1" for _, _, dst in moves)
+    # telemetry came along for every resident (graceful drain default)
+    assert all(fleet.window_state(k, since=4.0) for k in keys)
+    detached = fleet.remove_host("edge-0")
+    assert detached.host == "edge-0"
+    assert [h.host for h in fleet.hosts()] == ["edge-1"]
+    with pytest.raises(ValueError):       # nothing left to evacuate onto
+        fleet.evacuate("edge-1")
+
+
+def test_remove_host_refuses_resident_services_and_set_capacity():
+    fleet, keys = _scraped_fleet()
+    with pytest.raises(ValueError):
+        fleet.remove_host("edge-0")
+    assert fleet.set_capacity("edge-0", "cores", 4.0) == 4.0
+    assert next(h for h in fleet.hosts()
+                if h.host == "edge-0").capacity["cores"] == 4.0
+    with pytest.raises(KeyError):
+        fleet.set_capacity("edge-0", "gpus", 1.0)
+    with pytest.raises(KeyError):
+        fleet.set_capacity("edge-9", "cores", 1.0)

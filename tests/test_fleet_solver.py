@@ -141,7 +141,9 @@ def test_bucketed_solve_matches_sequential_per_host_solves():
     problem = SolverProblem(_specs(10))
     host_of = {f"s{i}": ("big" if i < 8 else f"small{i}") for i in range(10)}
     caps = {"big": 16.0, "small8": 2.0, "small9": 2.0}
-    fp = FleetSolverProblem(problem, host_of, caps)
+    # bucketed=True: the raw one-bucket-per-layout-key structure (the auto
+    # default would merge the lone big host into the small bucket here)
+    fp = FleetSolverProblem(problem, host_of, caps, bucketed=True)
     assert len(fp.buckets) == 2
     assert fp.bucket_of["big"] == (8, 8)
     assert fp.bucket_of["small8"] == (1, 1)
@@ -170,6 +172,29 @@ def test_bucketed_is_byte_identical_to_unbucketed_when_homogeneous():
     a_u, s_u = fu.solve_many(models, rps, x0, seed=5)
     assert np.array_equal(a_b, a_u)
     assert np.array_equal(s_b, s_u)
+
+
+def test_auto_bucketing_merges_singletons_and_matches_sequential():
+    """The auto default folds the lone 8-service host into the small-host
+    bucket (one padded batch, no per-singleton compiled scan) and still
+    matches its own sequential oracle exactly."""
+    problem = SolverProblem(_specs(10))
+    host_of = {f"s{i}": ("big" if i < 8 else f"small{i}") for i in range(10)}
+    caps = {"big": 16.0, "small8": 2.0, "small9": 2.0}
+    fa = FleetSolverProblem(problem, host_of, caps)
+    ft = FleetSolverProblem(problem, host_of, caps, bucketed=True)
+    assert len(ft.buckets) == 2 and len(fa.buckets) == 1
+    assert fa.layout_key != ft.layout_key     # compiled pipelines re-key
+    models = _models(problem)
+    rps = np.full(10, 50.0, np.float32)
+    x0 = problem.random_assignment(np.random.default_rng(2), 20.0)
+    a_a, s_a = fa.solve_many(models, rps, x0, seed=11)
+    a_q, s_q = fa.solve_sequential(models, rps, x0, seed=11)
+    np.testing.assert_allclose(a_a, a_q, atol=1e-5)
+    np.testing.assert_allclose(s_a, s_q, atol=1e-5)
+    groups = {"big": list(range(8)), "small8": [8], "small9": [9]}
+    for h, svcs in groups.items():
+        assert _host_cores(problem, a_a, svcs) <= caps[h] + 1e-3, h
 
 
 def test_bucketed_random_assignment_feasible_per_host():

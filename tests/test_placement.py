@@ -1,8 +1,9 @@
 """Marginal-fulfillment placement: score-driven ``Fleet.place``,
 ``migrate``/``rebalance`` with hysteresis, and the RASK-side scorer.
 
-ISSUE 4 satellite gates: placement scores match a brute-force per-host
-solve oracle on small fleets; ``rebalance`` is a no-op below the hysteresis
+ISSUE 4/5 gates: the candidate-batched placement scores match the
+brute-force per-candidate dispatch oracle (and stay close to fully
+unpadded per-subset solves); ``rebalance`` is a no-op below the hysteresis
 threshold and idempotent above it; ``_least_loaded`` ties resolve on the
 host id, not dict insertion order.
 """
@@ -132,10 +133,30 @@ def _trained_agent(seed=0, hosts=2, replicas=1, duration=120, **cfg):
     return env, agent
 
 
-def test_placement_scores_match_bruteforce_per_host_oracle():
+def test_placement_scores_match_bruteforce_oracle():
+    """ISSUE 5 acceptance: the ONE-dispatch candidate-batched scorer
+    reproduces the brute-force per-candidate dispatch loop (identical
+    padded tables and PRNG keys) to <= 1e-5 — same scores, same argmax
+    move for every service."""
+    env, agent = _trained_agent()
+    sb = agent.placement_scores()
+    sq = agent.placement_scores(batched=False)
+    assert set(sb) == set(agent.services)
+    hosts = [h.host for h in env.platform.hosts()]
+    for sid in sb:
+        for h in hosts:
+            assert sb[sid][h] == pytest.approx(sq[sid][h], abs=1e-5)
+        assert max(sb[sid], key=lambda h: (sb[sid][h], h)) == \
+            max(sq[sid], key=lambda h: (sq[sid][h], h))
+
+
+def test_placement_scores_close_to_unpadded_subset_solves():
+    """The padded candidate rows optimize the same subproblems as fully
+    unpadded per-subset ``SolverProblem``s: only the uniform random starts
+    differ (draw shapes follow the padded dim), so converged scores agree
+    to optimizer tolerance — the PR-4 semantic, preserved."""
     env, agent = _trained_agent()
     scores = agent.placement_scores()
-    assert set(scores) == set(agent.services)
     problem = agent.problem
     sidx = {s.name: i for i, s in enumerate(problem.specs)}
     rps = agent._rps_vector(None)
@@ -151,7 +172,8 @@ def test_placement_scores_match_bruteforce_per_host_oracle():
             [x0[problem.offsets[i]:problem.offsets[i]
                 + problem.specs[i].n_params] for i in idx])
         _, score = sub.solve_pgd(sub_models, rps[list(idx)], sub_x0,
-                                 capacity, n_starts=4, iters=12, seed=0)
+                                 capacity, n_starts=agent.cfg.score_starts,
+                                 iters=agent.cfg.score_iters, seed=0)
         return float(score)
 
     sid = agent.services[0]
@@ -165,7 +187,7 @@ def test_placement_scores_match_bruteforce_per_host_oracle():
         else:
             expect = oracle(tuple(sorted(residents + (i,))), cap) - \
                 oracle(residents, cap)
-        assert scores[sid][host.host] == pytest.approx(expect, abs=1e-5)
+        assert scores[sid][host.host] == pytest.approx(expect, abs=5e-2)
 
 
 def test_rebalance_drains_overloaded_host_then_is_idempotent():

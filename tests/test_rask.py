@@ -121,3 +121,98 @@ def test_compile_time_reported_separately():
     agent.decide(obs)
     assert agent.last_decision.runtime_s > 0.0
     assert agent.last_decision.compile_s == 0.0
+
+
+# -- online solver budget adaptation (ISSUE 5 satellite) ----------------------
+
+def _agent_only(**cfg_kw):
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          seed=0)
+    return env, RASKAgent(env.platform, paper_knowledge(),
+                          RaskConfig(**cfg_kw), seed=0)
+
+
+def test_adapt_budget_shrinks_to_floors_and_restores_on_shift():
+    env, agent = _agent_only(adapt_budget=True, adapt_patience=2,
+                             pgd_iters=32, pgd_starts=6)
+    full = (32, 6)
+
+    def budget():
+        return (agent._budget_iters, agent._budget_starts)
+
+    agent._adapt_budget(10.0, 10.001)         # calm 1: within patience
+    assert budget() == full
+    agent._adapt_budget(10.0, 10.002)         # calm 2 -> halve
+    assert budget() == (16, 3)
+    assert agent._last_score is None          # grace cycle after a change
+    for _ in range(4):                        # down to the floors, no lower
+        agent._adapt_budget(10.0, 10.0)
+    assert budget() == (8, 2)
+    agent._adapt_budget(10.0, 10.2)           # 2%: noise band, no restore
+    assert budget() == (8, 2) and agent._calm_cycles == 0
+    agent._adapt_budget(10.0, 10.5)           # 5% score move -> restore
+    assert budget() == full
+    agent._adapt_budget(10.0, 10.05)          # sub-tol move counts as calm
+    agent._adapt_budget(None, 10.0)           # no score baseline: no-op
+    agent._adapt_budget(float("nan"), 10.0)   # degenerate solve: no-op
+    assert budget() == full
+
+
+def test_adapt_budget_off_keeps_configured_budget():
+    env, agent = _agent_only(pgd_iters=24, pgd_starts=5)
+    for _ in range(6):
+        agent._adapt_budget(10.0, 10.0)
+    assert (agent._budget_iters, agent._budget_starts) == (24, 5)
+
+
+def test_decision_info_records_active_budget():
+    env, agent, hist = run_rask(backend="pgd", xi=4, duration=200,
+                                eta=0.0, adapt_budget=True, adapt_patience=2,
+                                adapt_iters_floor=8, adapt_starts_floor=2,
+                                pgd_iters=16, pgd_starts=4)
+    info = agent.last_decision
+    assert not info.explored
+    assert info.pgd_iters in (16, 8) and info.pgd_starts in (4, 2)
+    # constant-load steady state: the score is stationary, so the budget
+    # converges to the floors (and stays there modulo rare noise restores)
+    seen = set()
+    for _ in range(10):
+        agent.decide(agent.observe(env.t))
+        seen.add((agent.last_decision.pgd_iters,
+                  agent.last_decision.pgd_starts))
+    assert (8, 2) in seen
+
+
+# -- topology refresh after churn (ISSUE 5) -----------------------------------
+
+def test_refresh_topology_is_noop_for_same_services():
+    env, agent = _agent_only()
+    problem = agent.problem
+    agent.refresh_topology()
+    assert agent.problem is problem           # same service set: kept
+
+
+def test_refresh_topology_carries_warm_start_across_service_set_change():
+    env, agent = _agent_only()
+    agent._cached_x = np.arange(agent.problem.dim, dtype=np.float32)
+    old = {s.name: (agent.problem.offsets[i], s.n_params)
+           for i, s in enumerate(agent.problem.specs)}
+    victim = agent.services[0]
+    kept = [s for s in agent.services if s != victim]
+    env.platform.deregister(victim)
+    newcomer = env.add_service(paper_profiles()["qr-detector"])
+    agent.refresh_topology()
+    assert agent.services == kept + [newcomer]
+    assert agent.problem.dim == agent._cached_x.shape[0]
+    mid = 0.5 * (agent.problem.lower + agent.problem.upper)
+    for i, s in enumerate(agent.problem.specs):
+        o, n = agent.problem.offsets[i], s.n_params
+        got = agent._cached_x[o:o + n]
+        if s.name in old:                     # survivors keep their slices
+            off, _ = old[s.name]
+            np.testing.assert_array_equal(
+                got, np.arange(off, off + n, dtype=np.float32))
+        else:                                 # newcomers start mid-box
+            np.testing.assert_allclose(got, mid[o:o + n])
+    # models and fit plan are rebuilt lazily against the new relation set
+    assert agent.stacked is None and agent._fit_plan is None

@@ -63,3 +63,80 @@ def test_workloads_deterministic_and_bounded():
         assert all(0.0 <= v <= 100.0 for v in vals)
         assert max(vals) > 50.0   # reaches high load
     assert constant(5.0)(123) == 5.0
+
+
+# -- churn events (ISSUE 5): the fleet changing mid-run -----------------------
+
+class _IdleAgent:
+    """Legacy-protocol no-op agent: lets ``run`` tick without deciding."""
+
+    def cycle(self, t):
+        return None
+
+
+def _churn_env():
+    from repro.env.simulator import EdgeEnvironment
+    return EdgeEnvironment(
+        [QR_PROFILE], replicas=4, seed=0,
+        hosts=[("edge-0", {"cores": 8.0}), ("edge-1", {"cores": 8.0})])
+
+
+def test_fail_and_drain_host_events():
+    from repro.env.simulator import ChurnEvent
+    env = _churn_env()
+    env.run(_IdleAgent(), duration_s=20,
+            events=[ChurnEvent(t=10.0, kind="drain_host", host="edge-1")])
+    assert [h.host for h in env.platform.hosts()] == ["edge-0"]
+    assert len(env.platform.services()) == 4
+    assert "edge-1" not in env.host_capacity
+    # drained residents kept their telemetry history (scraped since t=1)
+    for sid in env.platform.services():
+        assert env.platform.window_state(sid, since=0.0, until=9.0)
+
+
+def test_degrade_event_scales_capacity_and_next_plans_arbitrate():
+    from repro.env.simulator import ChurnEvent
+    env = _churn_env()
+    env.run(_IdleAgent(), duration_s=10,
+            events=[ChurnEvent(t=5.0, kind="degrade", host="edge-0",
+                               factor=0.5)])
+    host = next(h for h in env.platform.hosts() if h.host == "edge-0")
+    assert host.capacity["cores"] == 4.0
+    assert env.host_capacity["edge-0"]["cores"] == 4.0
+
+
+def test_arrive_and_depart_events():
+    from repro.env.simulator import ChurnEvent
+    env = _churn_env()
+    victim = sorted(env.platform.services())[0]
+    events = [ChurnEvent(t=5.0, kind="arrive", profile=QR_PROFILE),
+              ChurnEvent(t=12.0, kind="depart", service=victim)]
+    env.run(_IdleAgent(), duration_s=20, events=events)
+    services = env.platform.services()
+    assert len(services) == 4                 # 4 - 1 + 1
+    assert victim not in services
+    # the newcomer got a fresh per-type container number and is scraped
+    newcomer = next(s for s in services if s.endswith("/c4"))
+    assert env.platform.window_state(newcomer, since=6.0)
+    # the departed container idles at zero load in the pool
+    assert env.services.get(victim) is None
+
+
+def test_parse_churn_grammar():
+    from repro.env import parse_churn
+    events = parse_churn(
+        "fail:edge-1@600, degrade:edge-0@300:0.25,"
+        "arrive:qr-detector@500,depart:edge-0/qr-detector/c0@800",
+        [QR_PROFILE])
+    assert [e.kind for e in events] == \
+        ["degrade", "arrive", "fail_host", "depart"]   # time-sorted
+    assert events[0].factor == 0.25
+    assert events[1].profile is QR_PROFILE
+    assert events[3].service == "edge-0/qr-detector/c0"
+    import pytest
+    with pytest.raises(KeyError):
+        parse_churn("arrive:nope@5", [QR_PROFILE])
+    with pytest.raises(ValueError):
+        parse_churn("fail:edge-0")                     # missing @t
+    with pytest.raises(ValueError):
+        parse_churn("explode:edge-0@5")

@@ -25,3 +25,52 @@ def test_training_table_design_matrix():
     X, Y = tab.design_matrix("s", ("cores", "quality"), "tp_max")
     assert X.shape == (2, 2) and Y.shape == (2,)
     assert Y[1] == 90.0
+
+
+# -- export/import/transfer (migration support, ISSUE 5) ----------------------
+
+def test_export_import_roundtrip_preserves_window_means():
+    src, dst = TimeSeriesDB(), TimeSeriesDB()
+    for t in range(1, 8):
+        src.scrape("svc", float(t), {"a": t * 1.0, "b": 10.0 - t})
+    src.scrape("svc", 8.0, {"a": 8.0})            # b missing -> NaN column
+    before = src.window_mean("svc", since=3.0, until=8.0)
+    ts, cols, vals = src.export_window("svc")
+    assert list(ts) == [float(t) for t in range(1, 9)]
+    assert dst.import_window("svc", ts, cols, vals) == 8
+    assert dst.window_mean("svc", since=3.0, until=8.0) == before
+    assert dst.latest("svc").metrics == src.latest("svc").metrics
+
+
+def test_transfer_moves_series_and_drop_semantics():
+    src, dst = TimeSeriesDB(), TimeSeriesDB()
+    for t in range(1, 5):
+        src.scrape("svc", float(t), {"a": float(t)})
+    assert src.transfer("svc", dst) == 4
+    assert src.latest("svc") is None              # dropped at the source
+    assert dst.window_mean("svc", since=0.0)["a"] == 2.5
+    # transferring a service the DB never saw is a harmless no-op
+    assert src.transfer("ghost", dst) == 0
+
+
+def test_import_interleaved_history_merges_sorted():
+    a, b = TimeSeriesDB(), TimeSeriesDB()
+    for t in (1.0, 2.0, 5.0, 6.0):
+        a.scrape("svc", t, {"x": t})
+    for t in (3.0, 4.0):
+        b.scrape("svc", t, {"x": t, "y": 1.0})
+    b.transfer("svc", a)
+    ts, cols, vals = a.export_window("svc")
+    assert list(ts) == [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+    assert a.window_mean("svc", since=0.0)["x"] == 3.5
+    # the y column exists only where the merged rows carried it
+    assert a.window_mean("svc", since=3.0, until=4.0)["y"] == 1.0
+
+
+def test_export_window_subrange():
+    db = TimeSeriesDB()
+    for t in range(1, 11):
+        db.scrape("svc", float(t), {"a": float(t)})
+    ts, cols, vals = db.export_window("svc", since=4.0, until=7.0)
+    assert list(ts) == [4.0, 5.0, 6.0, 7.0]
+    assert vals.shape == (4, 1)
