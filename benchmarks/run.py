@@ -93,6 +93,13 @@ def _report_from_artifacts(name, common) -> bool:
             return False
         e8_placement.report(r)
         return True
+    if name == "e9":
+        from . import e9_slo_burn
+        r = common.load(e9_slo_burn.ARTIFACT)
+        if not r:
+            return False
+        e9_slo_burn.report(r)
+        return True
     return False
 
 
@@ -193,6 +200,66 @@ def check_e7() -> int:
     return 0 if ok else 1
 
 
+def check_e9() -> int:
+    """SLO error-budget control-plane gate vs the committed e9 artifact:
+    a seeded re-run of the committed failover configuration (the
+    trajectory is deterministic, so every runbook fact must reproduce)
+    has to show the fast-burn alert firing within ``ALERT_FIRE_CYCLES``
+    agent cycles of the hub outage with no alert already firing entering
+    it, clearing after the evacuated services recover, burn-weighted
+    recovery at least as good as the burn-blind e8 baseline, a non-empty
+    quiet window with zero recompiles, and a jit-trace-free accounting
+    pass.  Shorter durations are NOT used here: the alert policy is tuned
+    against the settled pre-failover equilibrium, which a truncated run
+    never reaches."""
+    from . import common, e9_slo_burn
+
+    committed = common.load("e9_slo_burn")
+    if not committed or "burn_failover" not in committed:
+        print("e9-check,1,missing-committed-artifact")
+        return 1
+    ref = committed["burn_failover"]
+    e9_slo_burn.REPS = 10
+    e9_slo_burn.ARTIFACT = "e9_slo_burn_check"
+    acct = e9_slo_burn.accounting_bench()
+    row = e9_slo_burn.burn_failover_bench()
+    common.save("e9_slo_burn_check",
+                {"accounting": acct, "burn_failover": row})
+    e8 = common.load("e8_placement") or {}
+    baseline = (e8.get("failover") or {}).get("mean_recovered", 0.0)
+    recompiles = sum((row.get("steady_state_recompiles") or {}).values())
+    ref_recompiles = sum((ref.get("steady_state_recompiles") or {}).values())
+    jit_traces = sum((acct.get("jit_traces_during_accounting") or {}).values())
+    fired = row["alert_fire_cycles"] is not None \
+        and row["alert_fire_cycles"] <= e9_slo_burn.ALERT_FIRE_CYCLES
+    ok = (fired
+          and row["alert_cleared"]
+          and not row["firing_at_failure"]
+          and ref["alert_fire_cycles"] is not None
+          and ref["alert_fire_cycles"] <= e9_slo_burn.ALERT_FIRE_CYCLES
+          and ref["alert_cleared"]
+          and not ref["firing_at_failure"]
+          and row["mean_recovered"] >= max(baseline, 0.864)
+          and ref["mean_recovered"] >= max(baseline, 0.864)
+          and recompiles == 0
+          and ref_recompiles == 0
+          and row.get("quiet_cycles", 0) > 0
+          and ref.get("quiet_cycles", 0) > 0
+          and jit_traces == 0)
+    print(f"e9-check[alert],0,fire_cycles={row['alert_fire_cycles']}"
+          f" cleared={row['alert_cleared']}"
+          f" firing_at_failure={row['firing_at_failure']}")
+    print(f"e9-check[recovery],0,{row['mean_recovered']:.4f}"
+          f" committed={ref['mean_recovered']:.4f}"
+          f" baseline_e8={baseline:.4f}")
+    print(f"e9-check[recompiles],0,{recompiles}"
+          f" committed={ref_recompiles}"
+          f" (quiet_cycles={row.get('quiet_cycles', 0)})"
+          f" jit_traces={jit_traces}")
+    print(f"e9-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -202,19 +269,21 @@ def main() -> None:
                     help="recompute even when an artifact exists")
     ap.add_argument("--check", default=None, metavar="SUITE",
                     help="regression gate: compare a quick run against the "
-                         "committed artifact (supported: e6, e7, e8); exits "
-                         "nonzero on regression")
+                         "committed artifact (supported: e6, e7, e8, e9); "
+                         "exits nonzero on regression")
     args = ap.parse_args()
 
     if args.check:
-        checks = {"e6": check_e6, "e7": check_e7, "e8": check_e8}
+        checks = {"e6": check_e6, "e7": check_e7, "e8": check_e8,
+                  "e9": check_e9}
         if args.check not in checks:
             ap.error(f"--check supports {sorted(checks)}, got {args.check!r}")
         sys.exit(checks[args.check]())
 
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,
-                   e6_scalability, e7_hot_path, e8_placement, roofline)
+                   e6_scalability, e7_hot_path, e8_placement, e9_slo_burn,
+                   roofline)
 
     if args.quick:
         common.REPS = 2
@@ -242,6 +311,11 @@ def main() -> None:
         e8_placement.TRAIN_CYCLES = 12
         e8_placement.FAILOVER_DURATION = 500.0
         e8_placement.ARTIFACT = "e8_placement_quick"
+        # CI-sized SLO-burn smoke: fewer accounting reps, a short failover;
+        # separate artifact so the committed runbook record survives
+        e9_slo_burn.REPS = 10
+        e9_slo_burn.FAILOVER_DURATION = 500.0
+        e9_slo_burn.ARTIFACT = "e9_slo_burn_quick"
 
     suites = {
         "e1": e1_convergence.main,
@@ -253,6 +327,7 @@ def main() -> None:
         "e6h": e6_scalability.main_hetero,
         "e7": e7_hot_path.main,
         "e8": e8_placement.main,
+        "e9": e9_slo_burn.main,
         "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -12,7 +12,7 @@ from .regression import (BatchedFitPlan, PolynomialModel, StackedModels,
                          fit_batched, fit_polynomial, mse,
                          polynomial_exponents, select_degree, stack_models)
 from .slo import SLO, completion, fulfillment, global_fulfillment, \
-    service_fulfillment, violation_rate
+    service_fulfillment, violation_rate, windowed_violation_rate
 from .solver import FleetSolverProblem, PlacementProblem, ServiceSpec, \
     SolverProblem
 
@@ -26,5 +26,6 @@ __all__ = [
     "fit_polynomial", "mse", "polynomial_exponents", "select_degree",
     "stack_models", "SLO", "completion", "fulfillment",
     "global_fulfillment", "service_fulfillment", "violation_rate",
+    "windowed_violation_rate",
     "FleetSolverProblem", "PlacementProblem", "ServiceSpec", "SolverProblem",
 ]

@@ -197,6 +197,14 @@ class DecisionInfo:
     pgd_iters: int = 0
     # placement migrations applied by the per-cycle rebalance stage
     moves: int = 0
+    # active placement-scorer budget (0: no scoring ran this cycle) — the
+    # scorer follows the same shrink/restore hysteresis as the solve budget
+    score_starts: int = 0
+    score_iters: int = 0
+    # SLO error-budget control plane (repro.obs): services with a firing
+    # fast-burn alert, and the worst long-window burn rate seen this cycle
+    burn_alerts: int = 0
+    max_burn: float = 0.0
 
 
 @dataclasses.dataclass

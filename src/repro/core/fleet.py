@@ -320,5 +320,15 @@ class Fleet:
             out.update(h.window_states(since, until))
         return out
 
+    def window_columns(self, since: float, until: Optional[float] = None
+                       ) -> Dict[str, Tuple]:
+        """Raw columnar windows of all services, merged across hosts (each
+        service lives on exactly one host, so the union is disjoint) — the
+        fleet leg of the SLO accountant's bulk SLI feed."""
+        out: Dict[str, Tuple] = {}
+        for h in self._hosts.values():
+            out.update(h.window_columns(since, until))
+        return out
+
     def latest_metrics(self, sid: str) -> Dict[str, float]:
         return self.host_of(sid).latest_metrics(sid)

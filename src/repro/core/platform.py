@@ -244,6 +244,13 @@ class MUDAP:
         """Stabilized states of *all* services in one bulk DB query."""
         return self.db.window_means(list(self._services), since, until)
 
+    def window_columns(self, since: float, until: Optional[float] = None
+                       ) -> Dict[str, Tuple]:
+        """Raw columnar windows of all services in one bulk DB query:
+        {sid: (timestamps, column names, values)} — the SLO accountant's
+        per-cycle SLI feed (``repro.obs.SLOAccountant.update``)."""
+        return self.db.export_windows(list(self._services), since, until)
+
     def latest_metrics(self, sid: str) -> Dict[str, float]:
         """Most recent scrape of one service ({} before the first scrape)."""
         s = self.db.latest(str(sid))

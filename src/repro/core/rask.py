@@ -53,7 +53,11 @@ Beyond-paper extensions (used in EXPERIMENTS.md §Perf):
     in ``DecisionInfo``;
   * ``refresh_topology`` — re-binds the agent after churn (host failure or
     drain, capacity degradation, service arrival/departure) without
-    discarding surviving services' models, training rows, or warm starts.
+    discarding surviving services' models, training rows, or warm starts;
+  * ``attach_accountant`` — binds the SLO error-budget control plane
+    (``repro.obs``): a firing fast-burn alert overrides the rebalance
+    cadence and the budget adaptation, and burn weights order the
+    placement moves (``RaskConfig.burn_control``).
 """
 from __future__ import annotations
 
@@ -125,6 +129,18 @@ class RaskConfig:
     adapt_patience: int = 3         # calm cycles before each halving
     adapt_iters_floor: int = 8
     adapt_starts_floor: int = 2
+    # the placement scorer follows the same shrink/restore hysteresis (its
+    # own floors: the scorer already runs a lighter budget than the solve)
+    adapt_score_iters_floor: int = 8
+    adapt_score_starts_floor: int = 2
+    # SLO error-budget control (repro.obs, active once an accountant is
+    # attached): a firing fast-burn alert overrides the rebalance cadence
+    # (snapshot every cycle until it clears) and the budget adaptation
+    # (full solver budget restored, no shrinking while burning), and
+    # placement-score rows are scaled by the burn weights so the per-
+    # snapshot migration budget goes to the services burning fastest
+    burn_control: bool = True
+    burn_weight_cap: float = 4.0    # max extra weight (see burn_weights)
 
 
 class RASKAgent(PlanningAgent):
@@ -168,8 +184,18 @@ class RASKAgent(PlanningAgent):
         # configured budget unless adapt_budget has shrunk it)
         self._budget_iters = self.cfg.pgd_iters
         self._budget_starts = self.cfg.pgd_starts
+        self._score_iters = self.cfg.score_iters
+        self._score_starts = self.cfg.score_starts
         self._calm_cycles = 0
         self._last_score: Optional[float] = None
+        # SLO error-budget control plane (attach_accountant): burn states
+        # refreshed by observe(), consumed by decide()'s rebalance/budget
+        # stages
+        self.accountant = None
+        self.burn_states: Dict[str, object] = {}
+        # cumulative counters for the metric registry (repro.obs.registry)
+        self.moves_total = 0
+        self.compile_s_total = 0.0
         self._build_rel_static()
 
     def _build_rel_static(self) -> None:
@@ -230,6 +256,26 @@ class RASKAgent(PlanningAgent):
                 relation_features=tuple(rels)))
         return SolverProblem(specs, fused=self.cfg.fused)
 
+    # -- SLO error-budget control plane (repro.obs) -----------------------------
+    def attach_accountant(self, accountant) -> None:
+        """Bind an ``obs.SLOAccountant``: every ``observe`` refreshes its
+        rolling SLI rings (one bulk columnar pass, plain numpy — no jit
+        traces), and ``decide`` consumes the burn state as a first-class
+        control signal (see ``RaskConfig.burn_control``)."""
+        self.accountant = accountant
+
+    def _fast_alerts(self) -> List[str]:
+        """Services whose fastest burn policy is firing (empty without an
+        attached accountant or with ``burn_control`` off)."""
+        if self.accountant is None or not self.cfg.burn_control:
+            return []
+        return self.accountant.fast_alerts()
+
+    def _max_burn(self) -> float:
+        """Worst long-window burn rate across services (0.0 when idle)."""
+        return max((st.burn_rate() for st in self.burn_states.values()),
+                   default=0.0)
+
     # -- observation (§IV-A) ---------------------------------------------------
     def observe(self, t: float, window: float = 5.0) -> Dict[str, Dict[str, float]]:
         """Append the stabilized state of each service to D; returns the states.
@@ -246,6 +292,8 @@ class RASKAgent(PlanningAgent):
             row.update(self.platform.assignment(sid))  # features = applied params
             self.table.append(sid, row)
             states[sid] = row
+        if self.accountant is not None:
+            self.burn_states = self.accountant.update(t)
         return states
 
     # -- Algorithm 1 ------------------------------------------------------------
@@ -257,13 +305,27 @@ class RASKAgent(PlanningAgent):
             self.last_decision = DecisionInfo(explored=True)
             return self._plan(self._explore())
 
-        moves = self._maybe_rebalance(obs)    # optional per-cycle placement
+        alerts = self._fast_alerts()
+        if alerts:
+            # a firing fast-burn alert is a regime change by definition:
+            # restore the full solver budget at once (the shrunk steady-
+            # state budget solves noisier exactly when precision matters
+            # most) and hold off further shrinking until the alert clears
+            self._budget_iters = self.cfg.pgd_iters
+            self._budget_starts = self.cfg.pgd_starts
+            self._score_iters = self.cfg.score_iters
+            self._score_starts = self.cfg.score_starts
+            self._calm_cycles = 0
+        moves, scored = self._maybe_rebalance(obs, alerts)
         t0 = time.perf_counter()
         self._cycle_draws = None      # per-cycle randomness, drawn once
         out = self._solve_cycle(obs)                        # lines 6-11
         if out is None:
-            self.last_decision = DecisionInfo(explored=True,
-                                              moves=len(moves))
+            self.last_decision = DecisionInfo(
+                explored=True, moves=len(moves),
+                score_starts=self._score_starts if scored else 0,
+                score_iters=self._score_iters if scored else 0,
+                burn_alerts=len(alerts), max_burn=self._max_burn())
             return self._plan(self._explore())
         if self._last_solve_cold:
             # that run paid jit trace+compile time: re-run the whole cycle
@@ -283,28 +345,50 @@ class RASKAgent(PlanningAgent):
         used_starts, used_iters = self._budget_starts, self._budget_iters
         self._cached_x = np.asarray(a, np.float32)          # §IV-B3 cache
         prev_score, self._last_score = self._last_score, float(score)
-        self._adapt_budget(prev_score, float(score))
+        if not alerts:      # no shrinking while the error budget is burning
+            self._adapt_budget(prev_score, float(score))
+        self.moves_total += len(moves)
+        self.compile_s_total += compile_s
         self.last_decision = DecisionInfo(
             explored=False, runtime_s=runtime, compile_s=compile_s,
             score=score, pgd_starts=used_starts, pgd_iters=used_iters,
-            moves=len(moves))
+            moves=len(moves),
+            score_starts=self._score_starts if scored else 0,
+            score_iters=self._score_iters if scored else 0,
+            burn_alerts=len(alerts), max_burn=self._max_burn())
         return self._plan(noised)
 
-    def _maybe_rebalance(self, obs) -> List[Tuple[str, str, str]]:
+    def _maybe_rebalance(self, obs, alerts: Sequence[str] = ()
+                         ) -> Tuple[List[Tuple[str, str, str]], bool]:
         """The optional per-cycle placement stage (``rebalance_every=N``):
         every N post-exploration cycles take ONE fresh batched score
         snapshot and apply at most one migration — the monotone one-move-
         per-snapshot ascent of ``rebalance``, amortized over cycles.  A
         topology change rebuilds the fleet solve (one recompile per applied
-        move; none at the rebalance fixed point)."""
+        move; none at the rebalance fixed point).
+
+        A firing fast-burn alert (``alerts``) overrides the cadence — a
+        snapshot is taken EVERY cycle until the alert clears — and the
+        snapshot's rows are scaled by the accountant's burn weights, so the
+        one-move budget is spent on the service burning error budget
+        fastest first.  Returns (applied moves, whether a snapshot ran)."""
         n = self.cfg.rebalance_every
         if (n <= 0 or self.fleet_problem is None
                 or self.rounds < self.cfg.xi
-                or (self.rounds - self.cfg.xi) % n != 0):
-            return []
+                or ((self.rounds - self.cfg.xi) % n != 0 and not alerts)):
+            return [], False
         scores = self.placement_scores(obs)
         if not scores:
-            return []
+            return [], False
+        if alerts and self.accountant is not None:
+            # scale whole rows: within-row argmax (the best host) is
+            # unchanged, but a burning service's gain grows relative to
+            # calm services', so it wins the descending-gain ordering and
+            # clears the hysteresis gate sooner
+            weights = self.accountant.burn_weights(self.cfg.burn_weight_cap)
+            scores = {sid: {h: s * weights.get(sid, 1.0)
+                            for h, s in row.items()}
+                      for sid, row in scores.items()}
         moves = self.platform.rebalance(scores, limit=1)
         if moves:
             self._build_fleet_problem()
@@ -312,7 +396,7 @@ class RASKAgent(PlanningAgent):
             # (that is why the move was chosen): grace the budget
             # adaptation so the jump is not misread as a load shift
             self._last_score = None
-        return moves
+        return moves, True
 
     def _adapt_budget(self, prev_score: Optional[float],
                       score: float) -> None:
@@ -341,18 +425,31 @@ class RASKAgent(PlanningAgent):
         if move >= cfg.adapt_tol:
             self._calm_cycles = 0
             if move >= restore_tol and \
-                    (self._budget_iters, self._budget_starts) != \
-                    (cfg.pgd_iters, cfg.pgd_starts):
+                    (self._budget_iters, self._budget_starts,
+                     self._score_iters, self._score_starts) != \
+                    (cfg.pgd_iters, cfg.pgd_starts,
+                     cfg.score_iters, cfg.score_starts):
                 self._budget_iters = cfg.pgd_iters
                 self._budget_starts = cfg.pgd_starts
+                self._score_iters = cfg.score_iters
+                self._score_starts = cfg.score_starts
                 self._last_score = None     # grace cycle after the change
             return
         self._calm_cycles += 1
         if self._calm_cycles >= cfg.adapt_patience:
             iters = max(self._budget_iters // 2, cfg.adapt_iters_floor)
             starts = max(self._budget_starts // 2, cfg.adapt_starts_floor)
-            if (iters, starts) != (self._budget_iters, self._budget_starts):
+            # the scorer shrinks in lockstep (its own floors): at steady
+            # state the candidate ordering is as stationary as the optimum,
+            # so the per-cycle snapshot does not need the full budget either
+            s_iters = max(self._score_iters // 2, cfg.adapt_score_iters_floor)
+            s_starts = max(self._score_starts // 2,
+                           cfg.adapt_score_starts_floor)
+            if (iters, starts, s_iters, s_starts) != \
+                    (self._budget_iters, self._budget_starts,
+                     self._score_iters, self._score_starts):
                 self._budget_iters, self._budget_starts = iters, starts
+                self._score_iters, self._score_starts = s_iters, s_starts
                 self._last_score = None     # grace cycle after the change
             self._calm_cycles = 0
 
@@ -663,12 +760,15 @@ class RASKAgent(PlanningAgent):
         pp, plan = self._placement_problem(residents, caps)
         models = self.stacked \
             if (self.cfg.fused and self.stacked is not None) else self.models
-        # the configured scoring budget, never the online-adapted decide
-        # budget: scores stay deterministic across cycles, so the rebalance
-        # fixed point cannot flap with the budget level
+        # the ADAPTIVE scoring budget (seed stays fixed): per budget level
+        # scores are deterministic, and the hysteresis gate plus the
+        # restore-on-shift adaptation absorb the level changes — at the
+        # rebalance fixed point the budget is settled, so the fixed point
+        # cannot flap with it; the active level is recorded in
+        # ``DecisionInfo.score_starts``/``score_iters``
         score_fn = pp.scores if batched else pp.scores_sequential
-        vec = score_fn(models, rps, x0, n_starts=self.cfg.score_starts,
-                       iters=self.cfg.score_iters, lr=self.cfg.pgd_lr, seed=0,
+        vec = score_fn(models, rps, x0, n_starts=self._score_starts,
+                       iters=self._score_iters, lr=self.cfg.pgd_lr, seed=0,
                        objective_impl=self.cfg.objective_impl)
         out: Dict[str, Dict[str, float]] = {}
         for sid in self.services:
@@ -723,10 +823,12 @@ class RASKAgent(PlanningAgent):
         kept = [s for s in self.services if s in set(current)]
         new = [s for s in current if s not in set(self.services)]
         self.capacity = self.platform.capacity[self.cfg.resource]
-        # churn is a regime change: restore the full solver budget and let
-        # the score baseline re-establish before adapting again
+        # churn is a regime change: restore the full solver AND scorer
+        # budgets and let the score baseline re-establish before adapting
         self._budget_iters = self.cfg.pgd_iters
         self._budget_starts = self.cfg.pgd_starts
+        self._score_iters = self.cfg.score_iters
+        self._score_starts = self.cfg.score_starts
         self._calm_cycles = 0
         self._last_score = None
         if kept == self.services and not new:

@@ -251,6 +251,30 @@ class TimeSeriesDB:
                 self._series.pop(service, None)
         return dst.import_window(service, ts, cols, vals)
 
+    def export_windows(self, services: Optional[Sequence[str]] = None,
+                       since: float = 0.0, until: Optional[float] = None
+                       ) -> Dict[str, Tuple[np.ndarray, List[str], np.ndarray]]:
+        """Bulk ``export_window``: one lock acquisition for ALL services.
+
+        Returns {service: (timestamps, column names, values)} — the feed of
+        the SLO accountant's per-cycle columnar SLI pass (``repro.obs``):
+        every service's new scrapes come out in one locked section instead
+        of |S| round-trips.  Services with no samples in the window are
+        omitted."""
+        with self._lock:
+            if services is None:
+                services = list(self._series)
+            out: Dict[str, Tuple[np.ndarray, List[str], np.ndarray]] = {}
+            for s in services:
+                ring = self._series.get(s)
+                if ring is None:
+                    continue
+                ts, vals = ring.window_slice(since, until)
+                if ts.shape[0] == 0:
+                    continue
+                out[s] = (ts.copy(), list(ring.cols), vals.copy())
+            return out
+
     def window_means(self, services: Optional[Sequence[str]] = None,
                      since: float = 0.0, until: Optional[float] = None
                      ) -> Dict[str, Dict[str, float]]:

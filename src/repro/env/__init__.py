@@ -2,8 +2,8 @@ from .profiles import (CV_PROFILE, PC_PROFILE, QR_PROFILE, ServiceProfile,
                        lm_profile, paper_knowledge, paper_profiles)
 from .scenarios import (HostSpec, churn_scenario, failover_scenario,
                         hetero_environment, hetero_knowledge, mixed_patterns,
-                        parse_churn, tiered_hosts, two_tier_environment,
-                        two_tier_hosts)
+                        parse_churn, sim_slo_budget, tiered_hosts,
+                        two_tier_environment, two_tier_hosts)
 from .simulator import ChurnEvent, ContainerPool, EdgeEnvironment, \
     SimulatedService
 from .workloads import bursty, constant, diurnal
@@ -14,4 +14,5 @@ __all__ = ["ServiceProfile", "QR_PROFILE", "CV_PROFILE", "PC_PROFILE",
            "SimulatedService", "bursty", "constant", "diurnal", "HostSpec",
            "churn_scenario", "failover_scenario", "hetero_environment",
            "hetero_knowledge", "mixed_patterns", "parse_churn",
-           "tiered_hosts", "two_tier_environment", "two_tier_hosts"]
+           "sim_slo_budget", "tiered_hosts", "two_tier_environment",
+           "two_tier_hosts"]

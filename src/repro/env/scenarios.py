@@ -106,6 +106,38 @@ def two_tier_environment(duration_s: float = 1800.0, seed: int = 0
     return env, hetero_knowledge(profiles)
 
 
+# -- SLO error budgets on the simulated clock ---------------------------------
+
+def sim_slo_budget(objective: float = 0.95, good_threshold: float = 0.6,
+                   scale: float = 1.0 / 20.0):
+    """The production SRE alert policies mapped onto the simulated clock.
+
+    ``SLOBudget``'s defaults are production-sized (1h/5m fast burn at
+    14.4x, 6h/30m slow burn at 6x over a 24h budget); a simulated run is
+    ~20 minutes.  ``scale=1/20`` compresses every window by the same
+    factor (fast 180s/15s, slow 1080s/90s, budget 72min) while the
+    dimensionless burn thresholds stay untouched — one 10s agent cycle
+    plays ~3.3 production minutes, so the fast long window spans 18
+    cycles.
+
+    A scrape is *good* when the service's weighted SLO fulfillment is at
+    least ``good_threshold``; with ``objective=0.95`` the fast policy
+    fires once >72% of a window's scrapes go bad (14.4 x 5%).  The
+    defaults are tuned empirically against the seeded failover world
+    (``e9``): the per-scrape fulfillment of a healthy-but-noisy service
+    dips below 0.6 in bursts too short to sustain a 72% bad rate over 3
+    simulated minutes, while the post-outage capacity squeeze does it
+    within one agent cycle — so the plane is quiet entering the failure,
+    fires within 3 cycles of it, and clears once the evacuated services
+    recover.  (Tightening ``good_threshold`` toward 0.9 makes chronic
+    steady-state noise page constantly; loosening ``scale`` toward 1/60
+    makes the windows too twitchy to separate noise from outage.)
+    """
+    from ..obs import SLOBudget
+    return SLOBudget(objective=objective,
+                     good_threshold=good_threshold).scaled(scale)
+
+
 # -- churn scenarios: the fleet changing mid-run ------------------------------
 
 def failover_scenario(duration_s: float = 1200.0, seed: int = 0,

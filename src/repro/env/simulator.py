@@ -285,6 +285,13 @@ class CycleRecord:
     rps: Dict[str, float]
     receipt: Optional[PlanReceipt] = None
     compile_s: float = 0.0                # first-solve jit compile time
+    # SLO error-budget control plane (repro.obs), populated when the agent
+    # carries an attached SLOAccountant: services with a firing fast-burn
+    # alert, worst long-window burn rate, and the fleet-level rolling error
+    # budget consumed (1.0 = the whole budget)
+    alerts: int = 0
+    max_burn: float = 0.0
+    budget_consumed: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -613,13 +620,21 @@ class EdgeEnvironment:
             if step % int(cycle_s) == 0:
                 result = self._drive(agent)
                 fulfillment, per_service = self.measured_fulfillment()
+                info = getattr(agent, "last_decision", None)
+                accountant = getattr(agent, "accountant", None)
+                fleet_burn = accountant.global_state() \
+                    if accountant is not None else None
                 rec = CycleRecord(
                     self.t, fulfillment, per_service,
                     result.runtime_s if result else 0.0,
                     result.explored if result else False,
                     {k: self.services[k].rps for k in self.services},
                     receipt=result.receipt if result else None,
-                    compile_s=result.compile_s if result else 0.0)
+                    compile_s=result.compile_s if result else 0.0,
+                    alerts=info.burn_alerts if info else 0,
+                    max_burn=info.max_burn if info else 0.0,
+                    budget_consumed=fleet_burn.budget_consumed
+                    if fleet_burn else 0.0)
                 history.append(rec)
                 if on_cycle:
                     on_cycle(rec)

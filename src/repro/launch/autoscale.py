@@ -85,6 +85,22 @@ def main(argv=None):
                     help="online solver budget adaptation (shrink PGD "
                          "iters/starts at steady state, restore on load "
                          "shifts)")
+    ap.add_argument("--slo-burn", action="store_true",
+                    help="SLO error-budget control plane: rolling SLI "
+                         "accounting with multiwindow burn-rate alerts "
+                         "(sim-scaled SRE policies), wired into the agent "
+                         "as a first-class scaling signal")
+    ap.add_argument("--slo-objective", type=float, default=0.95,
+                    help="availability objective for --slo-burn (a scrape "
+                         "is good when weighted fulfillment >= the "
+                         "threshold; the budget tolerates 1-objective bad)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics (golden signals + SLO "
+                         "budgets + solver internals) on this port for the "
+                         "duration of the run (0 picks a free port)")
+    ap.add_argument("--dump-metrics", default=None, metavar="PATH",
+                    help="write one Prometheus text-format snapshot to "
+                         "PATH after the run ('-' for stdout)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -118,6 +134,23 @@ def main(argv=None):
                                  rebalance_every=args.rebalance_every,
                                  adapt_budget=args.adapt_budget),
                       seed=args.seed)
+    accountant = None
+    registry = None
+    server = None
+    if args.slo_burn or args.metrics_port is not None or args.dump_metrics:
+        from ..env import sim_slo_budget
+        from ..obs import MetricRegistry, MetricsServer, SLOAccountant, \
+            golden_signals
+        registry = MetricRegistry()
+        if args.slo_burn:
+            accountant = SLOAccountant(
+                env.platform, sim_slo_budget(objective=args.slo_objective))
+            agent.attach_accountant(accountant)
+        golden_signals(registry, env.platform, accountant, agent)
+        if args.metrics_port is not None:
+            server = MetricsServer(registry, port=args.metrics_port)
+            port = server.start()
+            print(f"serving /metrics on http://127.0.0.1:{port}/metrics")
     events = None
     if args.churn:
         from ..env import parse_churn
@@ -135,6 +168,21 @@ def main(argv=None):
           f"{np.mean(post):.3f} violations={violation_rate(post):.2%} "
           f"capacity clips={capacity_clips} mean agent runtime="
           f"{np.mean([h.runtime_s for h in hist if not h.explored]) * 1e3:.0f}ms")
+    if accountant is not None:
+        fleet = accountant.global_state()
+        alert_cycles = sum(1 for h in hist if h.alerts)
+        print(f"slo: budget consumed={fleet.budget_consumed:.2f} "
+              f"sli={fleet.sli:.4f} alert cycles={alert_cycles} "
+              f"fast-alert seconds={accountant.alert_seconds.get('fast', 0.0):.0f}")
+    if args.dump_metrics and registry is not None:
+        from ..obs import snapshot
+        text = snapshot(registry)
+        if args.dump_metrics == "-":
+            print(text, end="")
+        else:
+            Path(args.dump_metrics).write_text(text)
+    if server is not None:
+        server.stop()
     return hist
 
 

@@ -1,0 +1,476 @@
+"""SLO error-budget control plane (repro.obs): burn-rate math properties,
+accountant end-to-end alert behavior, Prometheus exposition, and the
+zero-jit-trace guard on the accounting path."""
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+try:                                     # optional test dep
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # seeded fixed-example fallback so the properties still run where
+    # hypothesis is not installed (CI installs it via the [test] extra)
+    class _St:
+        @staticmethod
+        def booleans():
+            return lambda rng: bool(rng.integers(0, 2))
+
+        @staticmethod
+        def floats(lo, hi):
+            return lambda rng: float(rng.uniform(lo, hi))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem(rng) for _ in range(n)]
+            return draw
+
+    st = _St()
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(25):
+                    fn(*[s(rng) for s in strats])
+            return wrapper
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+from repro.core import MUDAP, SLO, windowed_violation_rate
+from repro.core.slo import violation_rate
+from repro.obs import (BurnPolicy, MetricRegistry, MetricsServer,
+                       SLOAccountant, SLOBudget, error_rate, error_rates,
+                       golden_signals, render, sli_flags)
+from repro.obs.slo_accounting import _SliRing
+
+
+# -- the rolling-rate primitive ------------------------------------------------
+
+def test_error_rate_basic():
+    ts = np.array([1.0, 2.0, 3.0, 4.0])
+    bad = np.array([True, False, True, False])
+    assert error_rate(ts, bad, window=10.0) == pytest.approx(0.5)
+    # window (2, 4]: samples at 3, 4 -> one bad
+    assert error_rate(ts, bad, window=2.0, until=4.0) == pytest.approx(0.5)
+    # window (3, 4]: only the good sample at 4
+    assert error_rate(ts, bad, window=1.0, until=4.0) == 0.0
+    assert error_rate([], [], window=5.0) == 0.0
+
+
+def test_error_rates_matches_scalar():
+    rng = np.random.default_rng(0)
+    ts = np.cumsum(rng.uniform(0.1, 2.0, 500))
+    bad = rng.random(500) < 0.2
+    windows = [1.0, 7.0, 50.0, 1e9]
+    vec = error_rates(ts, bad, windows)
+    for w, v in zip(windows, vec):
+        assert v == pytest.approx(error_rate(ts, bad, w)), w
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=60),
+       st.floats(0.5, 100.0))
+@settings(max_examples=60, deadline=None)
+def test_burn_rate_scale_invariant(flags, window):
+    """Resampling the same bad/good sequence onto a stretched clock with a
+    stretched window leaves the rate unchanged (burn rate is a ratio of
+    counts, not of durations)."""
+    ts = np.arange(1.0, len(flags) + 1.0)
+    bad = np.asarray(flags)
+    base = error_rate(ts, bad, window)
+    for k in (2.0, 7.5, 60.0):
+        assert error_rate(ts * k, bad, window * k) == pytest.approx(base)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=80))
+@settings(max_examples=60, deadline=None)
+def test_budget_monotonically_consumed(flags):
+    """Cumulative totals only ever grow as samples stream in — the error
+    budget is spent, never refunded (rolling windows forget, the cumulative
+    ledger does not)."""
+    ring = _SliRing(initial=4)     # tiny: exercise growth + compaction
+    bad_seen = 0
+    for i, f in enumerate(flags):
+        ring.append(np.array([float(i + 1)]), np.array([f]), horizon=-1.0)
+        bad_seen += int(f)
+        assert ring.total == i + 1
+        assert ring.bad_total == bad_seen          # never decreases
+    ts, bad = ring.view()
+    assert int(np.count_nonzero(bad)) == bad_seen  # view consistent
+
+
+def test_ring_compaction_preserves_window_and_totals():
+    ring = _SliRing(initial=8)
+    for i in range(100):
+        ring.append(np.array([float(i)]), np.array([i % 3 == 0]),
+                    horizon=float(i) - 10.0)       # keep only ~10 samples
+    assert ring.total == 100
+    assert ring.bad_total == 34                    # ceil(100/3)
+    ts, bad = ring.view()
+    assert ts[-1] == 99.0
+    assert np.all(np.diff(ts) > 0)                 # still sorted
+    # recent window answers survive compaction
+    assert error_rate(ts, bad, 3.0, until=99.0) == pytest.approx(1.0 / 3.0)
+
+
+# -- multiwindow multiburn alert logic ----------------------------------------
+
+def _burn_budget():
+    return SLOBudget(objective=0.9, budget_window_s=1000.0,
+                     policies=(BurnPolicy("fast", 100.0, 10.0, 2.0),),
+                     good_threshold=1.0)
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_alert_fires_iff_both_windows_exceed(long_rate, short_rate):
+    """The multiwindow recipe: the alert fires iff the long- AND the
+    short-window burn rates both exceed the policy threshold."""
+    b = _burn_budget()
+    policy = b.policies[0]
+    # construct a sample stream realizing the two rates: the long window
+    # holds 100 samples (1/s), the last 10 of which are the short window
+    short_bad = int(round(short_rate * 10))
+    long_bad_target = int(round(long_rate * 100))
+    head_bad = min(max(long_bad_target - short_bad, 0), 90)
+    bad = np.array([i < head_bad for i in range(90)]
+                   + [i < short_bad for i in range(10)])
+    ts = np.arange(1.0, 101.0)
+    burn = b.burn_rates(ts, bad, until=100.0)["fast"]
+    fires = burn[0] > policy.threshold and burn[1] > policy.threshold
+    exp_long = (head_bad + short_bad) / 100.0 / b.allowed
+    exp_short = short_bad / 10.0 / b.allowed
+    assert burn[0] == pytest.approx(exp_long)
+    assert burn[1] == pytest.approx(exp_short)
+    assert fires == (exp_long > policy.threshold
+                     and exp_short > policy.threshold)
+
+
+def test_sim_slo_budget_preset():
+    from repro.env import sim_slo_budget
+    b = sim_slo_budget()
+    assert b.objective == 0.95 and b.good_threshold == 0.6
+    assert b.policies[0].long_s == pytest.approx(180.0)   # fast, x1/20
+    assert b.policies[0].short_s == pytest.approx(15.0)
+    assert b.policies[0].threshold == 14.4
+
+
+def test_scaled_budget_preserves_thresholds():
+    b = SLOBudget().scaled(1.0 / 60.0)
+    assert b.policies[0].long_s == pytest.approx(60.0)
+    assert b.policies[0].short_s == pytest.approx(5.0)
+    assert b.policies[0].threshold == 14.4          # dimensionless
+    assert b.budget_window_s == pytest.approx(1440.0)
+    assert b.allowed == pytest.approx(0.01)
+
+
+# -- SLI extraction ------------------------------------------------------------
+
+def test_sli_flags_availability_matches_service_fulfillment():
+    from repro.core.slo import service_fulfillment
+    slos = [SLO("completion", 1.0, 1.0), SLO("q", 10.0, 0.5)]
+    budget = SLOBudget(good_threshold=0.9)
+    ts = np.array([1.0, 2.0, 3.0])
+    cols = ["completion", "q"]
+    vals = np.array([[1.0, 10.0], [0.5, 10.0], [1.0, 5.0]])
+    out_ts, bad = sli_flags(budget, slos, ts, cols, vals)
+    assert out_ts.tolist() == ts.tolist()
+    for i in range(3):
+        f = float(service_fulfillment(slos, dict(zip(cols, vals[i]))))
+        assert bad[i] == (f < 0.9 - 1e-9)
+
+
+def test_sli_flags_drops_rows_missing_metrics():
+    slos = [SLO("completion", 1.0, 1.0)]
+    budget = SLOBudget()
+    ts = np.array([1.0, 2.0])
+    vals = np.array([[1.0], [np.nan]])
+    out_ts, bad = sli_flags(budget, slos, ts, ["completion"], vals)
+    assert out_ts.tolist() == [1.0]                 # NaN row dropped
+    assert not bad[0]
+
+
+# -- windowed violation rate: one code path ------------------------------------
+
+def test_windowed_violation_rate_consistency():
+    ts = np.arange(1.0, 21.0)
+    f = np.where(ts % 4 == 0, 0.8, 1.0)             # every 4th cycle violates
+    # full-history window == the flat violation_rate
+    assert windowed_violation_rate(ts, f, window=100.0) \
+        == pytest.approx(violation_rate(list(f)))
+    # window (12, 20]: violations at 16, 20 -> 2/8
+    assert windowed_violation_rate(ts, f, window=8.0, until=20.0) \
+        == pytest.approx(0.25)
+
+
+# -- accountant end-to-end -----------------------------------------------------
+
+class _StubBackend:
+    def __init__(self):
+        self.completion = 1.0
+
+    def apply(self, param, value):
+        pass
+
+    def metrics(self):
+        return {"completion": self.completion, "rps": 10.0, "queue": 0.0,
+                "cpu_utilization": 0.4}
+
+
+def _stub_platform():
+    from repro.core import ApiDescription, ElasticityParameter, ServiceId
+    api = ApiDescription("svc", [ElasticityParameter(
+        "cores", "resources", "/resources", 0.1, 8.0, None, True)])
+    p = MUDAP({"cores": 8.0})
+    backends = {}
+    for i in range(2):
+        b = _StubBackend()
+        sid = ServiceId("edge-0", "svc", f"c{i}")
+        p.register(sid, api, b, [SLO("completion", 1.0, 1.0)])
+        backends[str(sid)] = b
+    return p, backends
+
+
+def test_accountant_fire_and_clear():
+    platform, backends = _stub_platform()
+    budget = SLOBudget(objective=0.9, budget_window_s=500.0,
+                       policies=(BurnPolicy("fast", 60.0, 5.0, 3.0),),
+                       good_threshold=1.0)
+    acct = SLOAccountant(platform, budget)
+    victim = sorted(backends)[0]
+    t = 0.0
+    # healthy phase: no alerts, full SLI
+    for _ in range(80):
+        t += 1.0
+        platform.scrape(t)
+        states = acct.update(t) if int(t) % 10 == 0 else acct.states
+    assert acct.fast_alerts() == []
+    assert states[victim].sli == 1.0
+    assert states[victim].budget_consumed == 0.0
+    # outage: one service degrades hard
+    backends[victim].completion = 0.3
+    fired_at = None
+    for _ in range(60):
+        t += 1.0
+        platform.scrape(t)
+        if int(t) % 10 == 0:
+            states = acct.update(t)
+            if fired_at is None and victim in acct.fast_alerts():
+                fired_at = t
+    assert fired_at is not None and fired_at <= 80.0 + 30.0   # <= 3 cycles
+    assert states[victim].fired("fast")
+    assert states[victim].bad_total > 0
+    other = sorted(backends)[1]
+    assert not states[other].fired("fast")          # blast radius: victim only
+    assert acct.burn_weights()[victim] > acct.burn_weights()[other]
+    # recovery: alert clears once the short window goes quiet
+    backends[victim].completion = 1.0
+    cleared_at = None
+    for _ in range(60):
+        t += 1.0
+        platform.scrape(t)
+        if int(t) % 10 == 0:
+            acct.update(t)
+            if cleared_at is None and victim not in acct.fast_alerts():
+                cleared_at = t
+    assert cleared_at is not None
+    events = [(sid, pol, ev) for _t, sid, pol, ev in acct.alert_log]
+    assert (victim, "fast", "fire") in events
+    assert (victim, "fast", "clear") in events
+    assert acct.alert_seconds["fast"] > 0.0
+    # the budget ledger remembers the outage after the alert clears
+    assert acct.states[victim].bad_total > 0
+    g = acct.global_state()
+    assert g is not None and g.sample_total == sum(
+        s.sample_total for s in acct.states.values())
+
+
+def test_accountant_survives_missing_service():
+    """A service disappearing from the platform (host failure) must not
+    break the update pass; its budget history stays on the ledger."""
+    platform, backends = _stub_platform()
+    acct = SLOAccountant(platform, SLOBudget())
+    t = 0.0
+    for _ in range(10):
+        t += 1.0
+        platform.scrape(t)
+    acct.update(t)
+    victim = sorted(backends)[0]
+    before = acct.states[victim].sample_total
+    platform.deregister(victim)
+    for _ in range(5):
+        t += 1.0
+        platform.scrape(t)
+    states = acct.update(t)
+    assert states[victim].sample_total == before    # ledger survives
+    survivor = sorted(backends)[1]
+    assert states[survivor].sample_total > before
+
+
+# -- zero-recompile gate on the accounting path --------------------------------
+
+def test_accounting_adds_zero_jit_traces():
+    """The whole SLI/burn pass is host-side numpy: running it must not add
+    a single entry to TRACE_COUNTS (the fused decide path's trace ledger),
+    so enabling observability cannot cause steady-state recompiles."""
+    from repro.core.regression import TRACE_COUNTS
+    platform, backends = _stub_platform()
+    acct = SLOAccountant(platform, SLOBudget(
+        policies=(BurnPolicy("fast", 60.0, 5.0, 14.4),)))
+    before = dict(TRACE_COUNTS)
+    t = 0.0
+    for _ in range(50):
+        t += 1.0
+        platform.scrape(t)
+        if int(t) % 10 == 0:
+            acct.update(t)
+    acct.global_state()
+    acct.burn_weights()
+    assert dict(TRACE_COUNTS) == before
+
+
+# -- burn-driven control + adaptive scorer budget ------------------------------
+
+def _paper_agent(**cfg_kw):
+    from repro.core import RASKAgent, RaskConfig
+    from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+    env = EdgeEnvironment(list(paper_profiles().values()), {"cores": 8.0},
+                          seed=0)
+    return env, RASKAgent(env.platform, paper_knowledge(),
+                          RaskConfig(**cfg_kw), seed=0)
+
+
+def test_adaptive_scorer_budget_shrinks_and_restores_in_lockstep():
+    env, agent = _paper_agent(adapt_budget=True, adapt_patience=2,
+                              pgd_iters=32, pgd_starts=6,
+                              score_iters=24, score_starts=4)
+
+    def scorer():
+        return (agent._score_iters, agent._score_starts)
+
+    assert scorer() == (24, 4)
+    agent._adapt_budget(10.0, 10.001)         # calm 1: within patience
+    agent._adapt_budget(10.0, 10.002)         # calm 2 -> halve both budgets
+    assert scorer() == (12, 2)
+    for _ in range(4):                        # to the scorer floors
+        agent._adapt_budget(10.0, 10.0)
+    assert scorer() == (8, 2)
+    agent._adapt_budget(10.0, 10.5)           # 5% score move -> full restore
+    assert scorer() == (24, 4)
+    assert (agent._budget_iters, agent._budget_starts) == (32, 6)
+
+
+class _StubAccountant:
+    def __init__(self, firing=()):
+        self._firing = list(firing)
+        self.updates = []
+
+    def fast_alerts(self, policy=None):
+        return list(self._firing)
+
+    def burn_weights(self, cap=4.0):
+        return {s: 1.0 + cap for s in self._firing}
+
+    def update(self, t):
+        self.updates.append(t)
+        return {}
+
+
+def test_fast_alerts_gated_on_accountant_and_burn_control():
+    env, agent = _paper_agent()
+    assert agent._fast_alerts() == []         # no accountant attached
+    agent.attach_accountant(_StubAccountant(firing=["svc"]))
+    assert agent._fast_alerts() == ["svc"]
+    env2, agent2 = _paper_agent(burn_control=False)
+    agent2.attach_accountant(_StubAccountant(firing=["svc"]))
+    assert agent2._fast_alerts() == []        # burn control switched off
+
+
+def test_observe_refreshes_attached_accountant():
+    env, agent = _paper_agent()
+    stub = _StubAccountant()
+    agent.attach_accountant(stub)
+    env.platform.scrape(1.0)
+    agent.observe(5.0)
+    assert stub.updates == [5.0]
+
+
+def test_alert_restores_full_budget_in_decide():
+    env, agent = _paper_agent(xi=0, adapt_budget=True,
+                              pgd_iters=16, pgd_starts=2,
+                              score_iters=16, score_starts=2)
+    # pretend adaptation already shrank everything to the floors
+    agent._budget_iters, agent._budget_starts = 8, 2
+    agent._score_iters, agent._score_starts = 8, 2
+    agent.attach_accountant(_StubAccountant(firing=["nope"]))
+    for t in (1.0, 2.0, 3.0, 4.0, 5.0):
+        env.platform.scrape(t)
+    agent.decide(agent.observe(5.0))
+    assert (agent._budget_iters, agent._budget_starts) == (16, 2)
+    assert (agent._score_iters, agent._score_starts) == (16, 2)
+    assert agent.last_decision.burn_alerts == 1
+
+
+# -- registry + Prometheus exposition ------------------------------------------
+
+def test_registry_and_render():
+    platform, backends = _stub_platform()
+    acct = SLOAccountant(platform, SLOBudget())
+    reg = MetricRegistry()
+    golden_signals(reg, platform, acct)
+    t = 0.0
+    for _ in range(10):
+        t += 1.0
+        platform.scrape(t)
+    acct.update(t)
+    text = render(reg)
+    assert "# TYPE repro_service_rps gauge" in text
+    assert "# TYPE repro_slo_samples_total counter" in text
+    sid = sorted(backends)[0]
+    assert f'repro_service_rps{{service="{sid}"}} 10.0' in text
+    assert f'repro_slo_sli{{service="{sid}"}} 1.0' in text
+    assert 'policy="fast"' in text
+    # counters are monotone across scrapes
+    line = [l for l in text.splitlines()
+            if l.startswith("repro_slo_samples_total")][0]
+    v1 = float(line.rsplit(" ", 1)[1])
+    platform.scrape(t + 1.0)
+    acct.update(t + 1.0)
+    line2 = [l for l in render(reg).splitlines()
+             if l.startswith("repro_slo_samples_total")][0]
+    assert float(line2.rsplit(" ", 1)[1]) >= v1
+
+
+def test_registry_rejects_kind_conflict():
+    reg = MetricRegistry()
+    reg.gauge("x")
+    with pytest.raises(ValueError):
+        reg.counter("x")
+
+
+def test_metrics_server_serves_scrape():
+    platform, _ = _stub_platform()
+    reg = MetricRegistry()
+    golden_signals(reg, platform)
+    platform.scrape(1.0)
+    with MetricsServer(reg, port=0) as srv:
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{srv.port}/metrics", timeout=5).read().decode()
+        assert "repro_service_rps" in body
+        with pytest.raises(Exception):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/nope", timeout=5)
+
+
+def test_escaping_and_special_values():
+    reg = MetricRegistry()
+    g = reg.gauge("esc", help='line\nbreak "quote"')
+    g.set(float("inf"), label='a"b\\c')
+    text = render(reg)
+    assert r'# HELP esc line\nbreak "quote"' in text
+    assert r'esc{label="a\"b\\c"} +Inf' in text
