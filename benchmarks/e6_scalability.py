@@ -18,9 +18,26 @@ Bucketing trades one extra compiled scan per layout bucket for not padding
 small hosts to the largest host's layout, so it pays off once buckets hold
 several hosts each (the XLA-CPU dispatch floor dominates below that) —
 ``SOLVE_FLEET`` sizes the committed artifact past that crossover.
-``benchmarks/run.py --check e6`` re-runs the microbench against the
+
+The ISSUE-7 control-plane scale suite rides the same artifact:
+
+* ``scale`` — the bucketed fleet solve swept to the 1000-service /
+  100-host point (``SCALE_FLEETS``), with the least-squares scaling
+  exponent of solve time in |S| (acceptance: <= 1.2 — the vmapped
+  one-dispatch path must stay near-linear), the wall time of the largest
+  point (acceptance: < 10 s, i.e. inside one control interval), and the
+  sharded-vs-unsharded byte parity at that point (``shard="auto"`` via
+  ``shard_map`` when multiple XLA devices exist; acceptance: exactly 0.0);
+* ``pipeline`` — decide latency with ``RaskConfig(pipeline=True)`` vs the
+  synchronous path on a seeded 48-service / 16-host fleet driven
+  end-to-end: the dispatch-then-collect cycle must hide >= 50% of the
+  solve latency behind the apply + telemetry-scrape window.
+
+``benchmarks/run.py --check e6`` re-runs the microbenches against the
 committed artifact and fails on a solve-time regression, a parity gap, a
-lost speedup, or any steady-state recompile.
+lost speedup, a superlinear scaling exponent, a blown control interval at
+the 1000-service point, a pipeline that stops hiding its solve, or any
+steady-state recompile.
 """
 import numpy as np
 
@@ -32,6 +49,19 @@ SOLVE_REPS = 7
 SCENARIO_REPS = 2
 SCENARIO_DURATION = None     # None -> E3_DURATION / 2 at call time
 HETERO_ARTIFACT = "e6_hetero"
+
+# ISSUE-7 scale sweep: same-shape fleets (10 services per host) growing to
+# the 1000-service / 100-host acceptance point, so the fitted exponent
+# measures |S| growth and not layout-bucket churn
+SCALE_FLEETS = ((13, 10, 20.0), (25, 10, 20.0), (50, 10, 20.0),
+                (100, 10, 20.0))
+SCALE_REPS = 3
+SCALE_EXPONENT_LIMIT = 1.2
+SCALE_INTERVAL_S = 10.0      # one control interval: ceiling for the 1000-pt
+PIPELINE_REPLICAS = 16       # 16 x paper triple = 48 services on 16 hosts
+PIPELINE_HOSTS = 16
+PIPELINE_DURATION = 500.0
+PIPELINE_HIDDEN_MIN = 0.5
 
 
 def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
@@ -64,15 +94,16 @@ def run(reps: int = common.REPS, duration: float = common.E3_DURATION / 2,
     return results
 
 
-def _solve_fleet():
-    """Synthetic 2-bucket fleet problem (SOLVE_FLEET) with fitted paper-like
-    3-parameter services — returns (problem, host_of, caps, models, rps, x0)."""
+def _solve_fleet(fleet=SOLVE_FLEET):
+    """Synthetic fleet problem (``fleet`` tiers of (n_hosts, services_per_
+    host, cores_per_host)) with fitted paper-like 3-parameter services —
+    returns (problem, host_of, caps, models, rps, x0)."""
     from repro.core.regression import fit_polynomial
     from repro.core.slo import SLO
     from repro.core.solver import ServiceSpec, SolverProblem
 
     specs, host_of, caps = [], {}, {}
-    for tier, (n_hosts, n_svc, cores) in enumerate(SOLVE_FLEET):
+    for tier, (n_hosts, n_svc, cores) in enumerate(fleet):
         for h in range(n_hosts):
             hostname = f"tier{tier}-{h}"
             caps[hostname] = cores
@@ -131,6 +162,83 @@ def solve_bench(reps: int = None) -> dict:
     return row
 
 
+def scale_bench(reps: int = None, fleets=None) -> dict:
+    """The control plane at 1000 services: bucketed solve time swept over
+    ``SCALE_FLEETS``, the fitted |S| scaling exponent, the largest point's
+    wall time against one control interval, and sharded-vs-unsharded byte
+    parity at that point (real multi-device parity when run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    import jax
+
+    from repro.core.solver import FleetSolverProblem
+
+    reps = SCALE_REPS if reps is None else reps
+    fleets = SCALE_FLEETS if fleets is None else fleets
+    points = []
+    fp = None
+    for fleet in fleets:
+        problem, host_of, caps, models, rps, x0 = _solve_fleet((fleet,))
+        fp = FleetSolverProblem(problem, host_of, caps, shard="auto")
+        t_us = common.bench(lambda: fp.solve_many(models, rps, x0),
+                            reps, warmup=1)
+        points.append({"services": len(problem.specs), "hosts": len(caps),
+                       "solve_us": t_us})
+    xs = np.log([p["services"] for p in points])
+    ys = np.log([p["solve_us"] for p in points])
+    exponent = float(np.polyfit(xs, ys, 1)[0])
+    # byte parity at the largest point: sharding changes WHERE a host's
+    # subproblem runs, never what it computes
+    a_s, s_s = fp.solve_many(models, rps, x0)
+    f0 = FleetSolverProblem(problem, host_of, caps, shard=False)
+    a_0, s_0 = f0.solve_many(models, rps, x0)
+    parity = float(max(np.max(np.abs(a_s - a_0)), np.max(np.abs(s_s - s_0))))
+    return {"points": points,
+            "scaling_exponent": exponent,
+            "largest_solve_s": points[-1]["solve_us"] / 1e6,
+            "n_devices": jax.device_count(),
+            "n_shards": fp.n_shards,
+            "shard_parity_max_abs_diff": parity}
+
+
+def pipeline_bench(duration: float = None, seed: int = 0) -> dict:
+    """Pipelined vs synchronous decide on a seeded 48-service / 16-host
+    fleet driven end-to-end: ``runtime_s`` of a pipelined cycle is only the
+    blocked dispatch + collect time — the solve itself runs on device while
+    the plan is applied and telemetry scraped.  Reports the hidden fraction
+    of the synchronous solve latency (acceptance: >= PIPELINE_HIDDEN_MIN)
+    and the fulfillment cost of the one-cycle plan lag."""
+    from repro.core import RASKAgent, RaskConfig
+    from repro.env import EdgeEnvironment, paper_knowledge, paper_profiles
+
+    duration = PIPELINE_DURATION if duration is None else duration
+
+    def drive(pipeline: bool):
+        env = EdgeEnvironment(list(paper_profiles().values()),
+                              {"cores": 8.0}, replicas=PIPELINE_REPLICAS,
+                              hosts=PIPELINE_HOSTS, seed=seed)
+        agent = RASKAgent(env.platform, paper_knowledge(),
+                          RaskConfig(xi=14, eta=0.0, pipeline=pipeline),
+                          seed=seed)
+        hist = env.run(agent, duration_s=duration)
+        solved = [h for h in hist if not h.explored and h.runtime_s > 0]
+        return {
+            "median_runtime_ms": float(np.median(
+                [h.runtime_s for h in solved]) * 1e3),
+            "median_dispatch_ms": float(np.median(
+                [h.dispatch_s for h in solved]) * 1e3),
+            "median_collect_ms": float(np.median(
+                [h.collect_s for h in solved]) * 1e3),
+            "mean_fulfillment": float(np.mean(
+                [h.fulfillment for h in hist[agent.cfg.xi:]])),
+        }
+
+    sync, piped = drive(False), drive(True)
+    hidden = 1.0 - piped["median_runtime_ms"] / sync["median_runtime_ms"]
+    return {"services": PIPELINE_REPLICAS * 3, "hosts": PIPELINE_HOSTS,
+            "sync": sync, "pipelined": piped,
+            "hidden_fraction": float(hidden)}
+
+
 def scenario_bench(reps: int = None, duration: float = None) -> dict:
     """The seeded two-tier RASK run: fulfillment + decide runtime + a
     steady-state recompile guard over extra post-run decides."""
@@ -165,23 +273,51 @@ def scenario_bench(reps: int = None, duration: float = None) -> dict:
 
 
 def run_hetero(reps: int = None, duration: float = None,
-               solve_reps: int = None) -> dict:
-    results = {"scenario": scenario_bench(reps, duration),
-               "solve": solve_bench(solve_reps)}
+               solve_reps: int = None, stages=None) -> dict:
+    """``stages``: subset of ("scenario", "solve", "scale", "pipeline") to
+    measure (None = all)."""
+    has = (lambda s: True) if stages is None else (lambda s: s in stages)
+    results = {}
+    if has("scenario"):
+        results["scenario"] = scenario_bench(reps, duration)
+    if has("solve"):
+        results["solve"] = solve_bench(solve_reps)
+    if has("scale"):
+        results["scale"] = scale_bench()
+    if has("pipeline"):
+        results["pipeline"] = pipeline_bench()
     common.save(HETERO_ARTIFACT, results)
     return results
 
 
 def report_hetero(r: dict) -> None:
-    s, v = r["scenario"], r["solve"]
-    print(f"e6[hetero-scenario],{s['median_runtime_ms'] * 1e3:.0f},"
-          f"{s['median_fulfillment']:.4f}"
-          f" recompiles={s['steady_state_recompiles']}")
-    print(f"e6[hetero-solve,{v['hosts']}],{v['bucketed_us']:.0f},"
-          f"padded={v['padded_us']:.0f}us"
-          f" speedup={v['bucketed_speedup']:.2f}x"
-          f" seq={v['sequential_us']:.0f}us"
-          f" parity={v['parity_max_abs_diff']:.2e}")
+    s, v = r.get("scenario"), r.get("solve")
+    if s:
+        print(f"e6[hetero-scenario],{s['median_runtime_ms'] * 1e3:.0f},"
+              f"{s['median_fulfillment']:.4f}"
+              f" recompiles={s['steady_state_recompiles']}")
+    if v:
+        print(f"e6[hetero-solve,{v['hosts']}],{v['bucketed_us']:.0f},"
+              f"padded={v['padded_us']:.0f}us"
+              f" speedup={v['bucketed_speedup']:.2f}x"
+              f" seq={v['sequential_us']:.0f}us"
+              f" parity={v['parity_max_abs_diff']:.2e}")
+    sc = r.get("scale")
+    if sc:
+        big = sc["points"][-1]
+        print(f"e6[scale,S={big['services']}/H={big['hosts']}],"
+              f"{big['solve_us']:.0f},exponent={sc['scaling_exponent']:.3f}"
+              f" largest={sc['largest_solve_s']:.2f}s"
+              f" shards={sc['n_shards']}/{sc['n_devices']}dev"
+              f" parity={sc['shard_parity_max_abs_diff']:.2e}")
+    p = r.get("pipeline")
+    if p:
+        print(f"e6[pipeline,S={p['services']}/H={p['hosts']}],"
+              f"{p['pipelined']['median_runtime_ms'] * 1e3:.0f},"
+              f"sync={p['sync']['median_runtime_ms'] * 1e3:.0f}us"
+              f" hidden={p['hidden_fraction']:.1%}"
+              f" lag_cost="
+              f"{p['sync']['mean_fulfillment'] - p['pipelined']['mean_fulfillment']:+.4f}")
 
 
 def main_hetero():

@@ -38,6 +38,17 @@ FAILOVER_DURATION = 1200.0
 FAILOVER_REPS = 1
 ARTIFACT = "e8_placement"
 
+# ISSUE-7 scale point: 1000 services / 100 hosts with a CAPPED candidate
+# set — an exhaustive |S| x |H| what-if sweep is 100k rows, but a real
+# rebalance pass only weighs moving services OFF the hottest devices ONTO
+# the coolest ones, so candidates are the residents of the SCALE_MOVER_HOSTS
+# most-loaded hosts crossed with the SCALE_TARGETS least-loaded targets
+# (plus one stay-put row per host)
+SCALE_FLEET = (100, 10, 20.0)
+SCALE_MOVER_HOSTS = 25
+SCALE_TARGETS = 4
+SCALE_REPS = 1
+
 
 def _trained_fleet_agent(replicas: int = 3, hosts: int = 3, seed: int = 0,
                          **cfg_kw):
@@ -89,6 +100,48 @@ def scorer_bench(reps: int = None, brute_reps: int = None) -> dict:
     return row
 
 
+def scale_bench(reps: int = None) -> dict:
+    """Placement scoring at the 1000-service / 100-host point: one batched
+    ``PlacementProblem`` dispatch over the capped candidate set (hot-host
+    movers x cool-host targets), sharded over available devices, with
+    sharded-vs-unsharded byte parity."""
+    import jax
+
+    from repro.core.solver import PlacementProblem
+
+    from .e6_scalability import _solve_fleet
+
+    reps = SCALE_REPS if reps is None else reps
+    problem, host_of, caps, models, rps, x0 = _solve_fleet((SCALE_FLEET,))
+    residents = {h: [] for h in caps}
+    for i, s in enumerate(problem.specs):
+        residents[host_of[s.name]].append(i)
+    load = {h: sum(float(x0[problem.offsets[i]]) for i in residents[h])
+            / caps[h] for h in caps}
+    by_load = sorted(caps, key=lambda h: (load[h], h))
+    targets, movers = by_load[:SCALE_TARGETS], by_load[-SCALE_MOVER_HOSTS:]
+    subsets = [residents[h] for h in sorted(caps)]       # stay-put rows
+    caps_list = [caps[h] for h in sorted(caps)]
+    for h in movers:
+        for i in residents[h]:
+            for t in targets:
+                subsets.append(sorted(residents[t] + [i]))
+                caps_list.append(caps[t])
+    pp_s = PlacementProblem(problem, subsets, caps_list, shard="auto")
+    pp_0 = PlacementProblem(problem, subsets, caps_list, shard=False)
+    s_s = pp_s.scores(models, rps, x0)
+    s_0 = pp_0.scores(models, rps, x0)
+    return {
+        "services": len(problem.specs), "hosts": len(caps),
+        "candidates": pp_s.n_candidates,
+        "buckets": [list(bk.key) for bk in pp_s.buckets],
+        "batched_us": common.bench(
+            lambda: pp_s.scores(models, rps, x0), reps, warmup=1),
+        "n_devices": jax.device_count(), "n_shards": pp_s.n_shards,
+        "shard_parity_max_abs_diff": float(np.max(np.abs(s_s - s_0))),
+    }
+
+
 def failover_bench(reps: int = None, duration: float = None) -> dict:
     """SLO fulfillment through a seeded hub drain: per-cycle rebalance on,
     residents evacuated via the batched scorer at 60% of the run."""
@@ -127,14 +180,17 @@ def failover_bench(reps: int = None, duration: float = None) -> dict:
 
 
 def run(stages=None) -> dict:
-    """``stages``: subset of ("scorer", "failover") to measure (None = all)
-    — the --check gate passes ("scorer",) and skips the slow scenario."""
+    """``stages``: subset of ("scorer", "failover", "scale") to measure
+    (None = all) — the --check gate passes ("scorer",) and skips the slow
+    scenario and the 1000-service scale point."""
     has = (lambda s: True) if stages is None else (lambda s: s in stages)
     results = {}
     if has("scorer"):
         results["scorer"] = scorer_bench()
     if has("failover"):
         results["failover"] = failover_bench()
+    if has("scale"):
+        results["scale"] = scale_bench()
     common.save(ARTIFACT, results)
     return results
 
@@ -156,6 +212,12 @@ def report(results: dict) -> None:
               f" dip={f['min_post_failover']:.4f}"
               f" recovered={f['mean_recovered']:.4f}"
               f" hosts_after={f['hosts_after']}")
+    sc = results.get("scale")
+    if sc:
+        print(f"e8[scale,S={sc['services']}/H={sc['hosts']}],"
+              f"{sc['batched_us']:.0f},candidates={sc['candidates']}"
+              f" shards={sc['n_shards']}/{sc['n_devices']}dev"
+              f" parity={sc['shard_parity_max_abs_diff']:.2e}")
 
 
 def main():

@@ -104,32 +104,67 @@ def _report_from_artifacts(name, common) -> bool:
 
 
 def check_e6() -> int:
-    """Heterogeneous-fleet regression gate vs the committed e6 artifact:
-    the bucketed solve must stay within 1.5x of the committed time (CI
-    machine headroom), still beat the single-padded-layout path, match the
-    sequential per-host oracle to 1e-5, and a quick two-tier scenario must
-    finish its steady-state decides without a single jit recompile."""
+    """Heterogeneous-fleet + control-plane-scale regression gate vs the
+    committed e6 artifact: the bucketed solve must stay within 1.5x of the
+    committed time (CI machine headroom), still beat the single-padded-
+    layout path, match the sequential per-host oracle to 1e-5, and a quick
+    two-tier scenario must finish its steady-state decides without a single
+    jit recompile.  The ISSUE-7 scale gates ride the same check: the fitted
+    |S| scaling exponent of the bucketed solve must stay <= 1.2 with the
+    1000-service / 100-host point inside one 10 s control interval, the
+    sharded solve must be byte-identical to the unsharded one (exactly
+    0.0), and the pipelined decide must hide >= 50% of the synchronous
+    solve latency behind the apply + scrape window."""
     from . import common, e6_scalability
 
     committed = common.load(e6_scalability.HETERO_ARTIFACT)
-    if not committed or "solve" not in committed:
+    if not committed or not all(k in committed for k in
+                                ("solve", "scale", "pipeline")):
         print("e6-check,1,missing-committed-artifact")
         return 1
     row = e6_scalability.solve_bench(reps=5)
     scen = e6_scalability.scenario_bench(reps=1, duration=260.0)
-    common.save("e6_hetero_check", {"scenario": scen, "solve": row})
+    # 3 of the 4 sweep points (skip the 250-svc one: one less compile, the
+    # fit still spans 130 -> 1000 services), 2 reps each
+    sc = e6_scalability.scale_bench(
+        reps=2, fleets=e6_scalability.SCALE_FLEETS[:1] +
+        e6_scalability.SCALE_FLEETS[2:])
+    pipe = e6_scalability.pipeline_bench(duration=400.0)
+    common.save("e6_hetero_check", {"scenario": scen, "solve": row,
+                                    "scale": sc, "pipeline": pipe})
     ref = committed["solve"]
     limit = 1.5 * ref["bucketed_us"]
     ok = (row["bucketed_us"] <= limit
           and row["bucketed_speedup"] >= 1.0
           and row["parity_max_abs_diff"] <= 1e-5
-          and scen["steady_state_recompiles"] == 0)
+          and scen["steady_state_recompiles"] == 0
+          and sc["scaling_exponent"] <= e6_scalability.SCALE_EXPONENT_LIMIT
+          and sc["largest_solve_s"] < e6_scalability.SCALE_INTERVAL_S
+          and sc["shard_parity_max_abs_diff"] == 0.0
+          and committed["scale"]["shard_parity_max_abs_diff"] == 0.0
+          and pipe["hidden_fraction"] >= e6_scalability.PIPELINE_HIDDEN_MIN)
     print(f"e6-check[bucketed],{row['bucketed_us']:.0f},"
           f"limit={limit:.0f}us committed={ref['bucketed_us']:.0f}us")
     print(f"e6-check[speedup],0,{row['bucketed_speedup']:.2f}x "
           f"(committed {ref['bucketed_speedup']:.2f}x)")
     print(f"e6-check[parity],0,{row['parity_max_abs_diff']:.2e}")
     print(f"e6-check[recompiles],0,{scen['steady_state_recompiles']}")
+    big = sc["points"][-1]
+    print(f"e6-check[scale],{big['solve_us']:.0f},"
+          f"exponent={sc['scaling_exponent']:.3f}"
+          f" (limit {e6_scalability.SCALE_EXPONENT_LIMIT})"
+          f" largest={sc['largest_solve_s']:.2f}s"
+          f" (limit {e6_scalability.SCALE_INTERVAL_S:.0f}s)"
+          f" S={big['services']}/H={big['hosts']}")
+    print(f"e6-check[shard-parity],0,"
+          f"{sc['shard_parity_max_abs_diff']:.2e}"
+          f" shards={sc['n_shards']}/{sc['n_devices']}dev"
+          f" (committed "
+          f"{committed['scale']['shard_parity_max_abs_diff']:.2e}"
+          f" @ {committed['scale']['n_shards']}shards)")
+    print(f"e6-check[pipeline],0,hidden={pipe['hidden_fraction']:.1%}"
+          f" (min {e6_scalability.PIPELINE_HIDDEN_MIN:.0%}, committed "
+          f"{committed['pipeline']['hidden_fraction']:.1%})")
     print(f"e6-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
     return 0 if ok else 1
 
@@ -303,6 +338,14 @@ def main() -> None:
         e6_scalability.SCENARIO_DURATION = 300.0
         e6_scalability.SOLVE_REPS = 3
         e6_scalability.HETERO_ARTIFACT = "e6_hetero_quick"
+        # CI-sized scale/pipeline smoke: sweep stops at 250 services and the
+        # pipelined fleet shrinks to 24 services on 8 hosts — the full
+        # 1000-service acceptance points live in --check e6
+        e6_scalability.SCALE_FLEETS = ((13, 10, 20.0), (25, 10, 20.0))
+        e6_scalability.SCALE_REPS = 2
+        e6_scalability.PIPELINE_REPLICAS = 8
+        e6_scalability.PIPELINE_HOSTS = 8
+        e6_scalability.PIPELINE_DURATION = 300.0
         # CI-sized placement smoke: fewer reps/training cycles, a short
         # failover scenario; separate artifact so the committed acceptance
         # record (scorer speedup + full failover trace) is not clobbered

@@ -205,6 +205,15 @@ class DecisionInfo:
     # fast-burn alert, and the worst long-window burn rate seen this cycle
     burn_alerts: int = 0
     max_burn: float = 0.0
+    # pipelined decide (RaskConfig(pipeline=True)): per-phase blocked times.
+    # ``dispatch_s`` is the async enqueue of this cycle's solve (the solve
+    # itself runs on device during the next control interval), ``collect_s``
+    # the block_until_ready + transfer of the PREVIOUS cycle's solve;
+    # ``runtime_s`` is their sum — the decide latency the control loop
+    # actually blocks on, with the solve hidden behind apply + scrape
+    pipelined: bool = False
+    dispatch_s: float = 0.0
+    collect_s: float = 0.0
 
 
 @dataclasses.dataclass

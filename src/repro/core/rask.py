@@ -64,7 +64,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +102,26 @@ class RaskConfig:
     pgd_lr: float = 0.18
     resource: str = "cores"     # the shared-capacity resource name
     fused: bool = True          # batched fit + fused objective (False: seed loop)
-    objective_impl: str = "reference"  # PGD candidate scoring kernel
+    # PGD candidate scoring kernel: "reference" (fused jnp, the default) |
+    # "pallas" | "pallas_interpret".  NOTE: on CPU both Pallas modes run
+    # through the interpreter and are SLOWER than the fused jnp path (e7
+    # measures ~1.5-2x on the steady decide); select "pallas" only when
+    # lowering to a real TPU/GPU backend.
+    objective_impl: str = "reference"
+    # device sharding of the bucketed fleet/placement solves
+    # (solver.shard_rows): "auto" (default) spreads each bucket's vmapped
+    # solve over every available device and degrades to the plain
+    # single-device vmap when jax.device_count() == 1 — results are
+    # byte-identical either way.  False disables; an int caps the count.
+    shard: Union[bool, int, str, None] = "auto"
+    # pipelined decide (dispatch-then-collect): each decide ASYNC-dispatches
+    # this cycle's fit+solve and returns the plan collected from the
+    # PREVIOUS cycle's dispatch, so the solve runs on device while the
+    # environment applies the plan and scrapes telemetry — the 10 s control
+    # interval hides the solve latency entirely.  Plans lag observations by
+    # one cycle; the first post-exploration cycle is a pipeline-fill round
+    # (no solved plan yet).  Per-phase timings land in DecisionInfo.
+    pipeline: bool = False
     # per-cycle placement stage: every N post-exploration cycles take one
     # batched placement-score snapshot and apply at most one migration
     # (0 = off; rebalancing then only happens via explicit ``rebalance()``)
@@ -163,6 +182,12 @@ class RASKAgent(PlanningAgent):
         self._degrees: Dict[str, int] = {}
         self._cached_x: Optional[np.ndarray] = None
         self.problem = self._build_problem()
+        # pipelined decide state: the in-flight dispatched solve (collected
+        # by the NEXT decide) and a topology generation counter — a pending
+        # result whose generation is stale (rebalance move, churn) is
+        # dropped instead of being applied to the wrong layout
+        self._pending: Optional[dict] = None
+        self._topo_gen = 0
         # on a Fleet, decide against each host's OWN capacity (one vmapped
         # solve per layout bucket) instead of the aggregate relaxation
         self.fleet_problem: Optional[FleetSolverProblem] = None
@@ -226,14 +251,18 @@ class RASKAgent(PlanningAgent):
     def _build_fleet_problem(self) -> None:
         """(Re)bind the per-host fleet solve to the platform's CURRENT
         placement — called at construction and again after ``rebalance``
-        migrates services (the bucket layouts follow the topology)."""
+        migrates services (the bucket layouts follow the topology).  Any
+        in-flight pipelined solve targets the OLD topology and is dropped."""
+        self._topo_gen += 1
+        self._pending = None
         platform = self.platform
         if hasattr(platform, "hosts") and hasattr(platform, "host_of"):
             self.fleet_problem = FleetSolverProblem(
                 self.problem,
                 {sid: platform.host_of(sid).host for sid in self.services},
                 {h.host: h.capacity[self.cfg.resource]
-                 for h in platform.hosts()})
+                 for h in platform.hosts()},
+                shard=self.cfg.shard)
 
     # -- problem construction -------------------------------------------------
     def _build_problem(self) -> SolverProblem:
@@ -317,6 +346,8 @@ class RASKAgent(PlanningAgent):
             self._score_starts = self.cfg.score_starts
             self._calm_cycles = 0
         moves, scored = self._maybe_rebalance(obs, alerts)
+        if self.cfg.pipeline and self.cfg.fused and self.cfg.backend == "pgd":
+            return self._decide_pipelined(obs, moves, scored, alerts)
         t0 = time.perf_counter()
         self._cycle_draws = None      # per-cycle randomness, drawn once
         out = self._solve_cycle(obs)                        # lines 6-11
@@ -356,6 +387,94 @@ class RASKAgent(PlanningAgent):
             score_starts=self._score_starts if scored else 0,
             score_iters=self._score_iters if scored else 0,
             burn_alerts=len(alerts), max_burn=self._max_burn())
+        return self._plan(noised)
+
+    def _decide_pipelined(self, obs, moves, scored: bool,
+                          alerts: Sequence[str]) -> ScalingPlan:
+        """Dispatch-then-collect decide (``RaskConfig(pipeline=True)``).
+
+        Phase 1 COLLECTS the solve dispatched by the *previous* decide —
+        ``jax.block_until_ready`` plus the cycle's one device->host
+        transfer; having had the whole control interval to run, the solve
+        is normally already done and the block is near-free.  Phase 2
+        fits this cycle's data and ASYNC-dispatches the next solve (the
+        fused jit call returns device futures; the computation overlaps
+        the environment's apply + settle + scrape until the next decide).
+        The emitted plan is the collected (previous) cycle's — a one-cycle
+        plan lag in exchange for hiding the whole solve latency.  Warm
+        starts stay as fresh as the synchronous path: the collect happens
+        before the dispatch, so the new solve warm-starts from the optimum
+        just collected.  A pending result whose topology generation is
+        stale (rebalance move, churn) is dropped, and the cycle degrades
+        to a pipeline-fill round."""
+        # -- phase 1: collect the in-flight solve -----------------------------
+        t0 = time.perf_counter()
+        pend, self._pending = self._pending, None
+        collected = None
+        if pend is not None and pend["gen"] == self._topo_gen:
+            jax.block_until_ready((pend["out"], pend["w"]))
+            out = np.asarray(pend["out"])   # the cycle's ONE transfer
+            self.stacked = pend["plan"].stacked(pend["w"])
+            self._models_view = None
+            d = pend["dim"]
+            collected = (out[:d], out[d:2 * d], float(out[2 * d:].sum()))
+        collect_s = time.perf_counter() - t0
+        if collected is not None:
+            a, noised, score = collected
+            self._cached_x = np.asarray(a, np.float32)      # §IV-B3 cache
+            prev_score, self._last_score = self._last_score, float(score)
+            if not alerts:  # no shrinking while the error budget is burning
+                self._adapt_budget(prev_score, float(score))
+
+        # -- phase 2: fit + async-dispatch the next solve ---------------------
+        dispatch_s = compile_s = 0.0
+        used_starts = used_iters = 0
+        data = self._collect_fit_data()
+        if data is None:
+            if collected is None:
+                self.stacked = None       # models incomplete: keep exploring
+        else:
+            seed = int(self.rng.integers(2 ** 31))
+            x0 = self._x0()
+            fkey = self._fused_key()
+            cold = not (fkey in self._warm_keys and fkey in self._fused_fns)
+            plan = self._fit_plan
+            td = time.perf_counter()
+            buf = plan.fill_packed(data)
+            out_dev, w_dev = self._fused_fn(fkey)(
+                jnp.asarray(buf), jnp.asarray(x0, jnp.float32),
+                jax.random.PRNGKey(seed),
+                jnp.asarray(self._rps_vector(obs)),
+                jnp.float32(self._eta_t()))
+            dispatch_s = time.perf_counter() - td
+            self._warm_keys.add(fkey)
+            self._warm_keys &= set(self._fused_fns)
+            self._pending = dict(out=out_dev, w=w_dev, plan=plan,
+                                 dim=self.problem.dim, gen=self._topo_gen)
+            used_starts, used_iters = self._budget_starts, self._budget_iters
+            if cold:
+                # a cold dispatch blocks for trace+compile: book it as
+                # compile time so runtime_s keeps its steady-state meaning
+                compile_s, dispatch_s = dispatch_s, 0.0
+
+        # -- emit: the collected (previous) cycle's plan ----------------------
+        self.moves_total += len(moves)
+        self.compile_s_total += compile_s
+        common = dict(moves=len(moves), compile_s=compile_s,
+                      score_starts=self._score_starts if scored else 0,
+                      score_iters=self._score_iters if scored else 0,
+                      burn_alerts=len(alerts), max_burn=self._max_burn(),
+                      pipelined=True, dispatch_s=dispatch_s,
+                      collect_s=collect_s)
+        if collected is None:
+            # pipeline fill: no solved plan to emit yet — hold the cached
+            # operating point if one exists, otherwise explore one round
+            hold = self._cached_x
+            self.last_decision = DecisionInfo(explored=hold is None, **common)
+            return self._plan(hold if hold is not None else self._explore())
+        self.last_decision = DecisionInfo(
+            explored=False, runtime_s=dispatch_s + collect_s, score=score,
+            pgd_starts=used_starts, pgd_iters=used_iters, **common)
         return self._plan(noised)
 
     def _maybe_rebalance(self, obs, alerts: Sequence[str] = ()
@@ -721,7 +840,8 @@ class RASKAgent(PlanningAgent):
         key = tuple((h, residents[h], float(caps[h])) for h in hosts)
         pp = cached_fn(self._placement_cache, key,
                        lambda: PlacementProblem(self.problem, subsets,
-                                                capacities), size=4)
+                                                capacities,
+                                                shard=self.cfg.shard), size=4)
         return pp, plan
 
     def placement_scores(self, obs: Optional[Mapping] = None,

@@ -65,6 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 import scipy.optimize
 
+try:
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:                     # pragma: no cover — very old jax
+    _shard_map = None
+
 from ..kernels import ops as kernel_ops
 from .regression import PolynomialModel, StackedModels, TRACE_COUNTS, \
     pad_capacity, stack_models
@@ -128,6 +133,56 @@ def cached_fn(cache: Dict[tuple, callable], key: tuple, build,
             cache.pop(next(iter(cache)))
         cache[key] = fn
     return fn
+
+
+def resolve_shard(shard: Union[bool, int, str, None]) -> int:
+    """Resolve a ``shard=`` spec to a shard (device) count.
+
+    ``"auto"``/``True`` use every available device — 1 on a single-device
+    backend, which keeps the current plain-vmap path; an int caps at the
+    device count; ``False``/``None`` disable sharding.  Multi-device CPU
+    testing forces the count up front via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    if shard in (False, None) or _shard_map is None:
+        return 1
+    ndev = jax.device_count()
+    if shard in ("auto", True):
+        return max(1, ndev)
+    return max(1, min(int(shard), ndev))
+
+
+def shard_rows(vf, n_rows: int, n_shards: int):
+    """Shard an already-vmapped per-row function over a 1-D device mesh.
+
+    The bucketed fleet/placement solves are embarrassingly parallel over
+    rows (hosts / candidate subsets): every input and output carries the
+    row axis in front, so ``shard_map`` over a ``("rows",)`` mesh splits
+    the vmap across devices with no cross-device communication.  Rows are
+    padded to a multiple of the shard count by re-running row
+    ``k % n_rows`` (total for any row count, even ``n_rows < n_shards``)
+    and outputs sliced back to ``n_rows``, so results stay byte-identical
+    to the unsharded vmap — only *which device* runs each row changes.
+    Always the FULL ``n_shards`` mesh: one jitted computation may hold one
+    shard_map per layout bucket, and jit rejects mixed device meshes, so a
+    small bucket must not shrink its mesh to its row count.  Returns
+    ``vf`` unchanged when there is nothing to shard over."""
+    n = n_shards
+    if n <= 1:
+        return vf
+    mesh = jax.make_mesh((n,), ("rows",))
+    spec = jax.sharding.PartitionSpec("rows")
+    inner = _shard_map(vf, mesh=mesh, in_specs=spec, out_specs=spec)
+    pad = (-n_rows) % n
+    if not pad:
+        return inner
+    idx = np.arange(n_rows + pad) % n_rows
+
+    def padded(*args):
+        ar = jax.tree_util.tree_map(lambda x: x[idx], args)
+        out = inner(*ar)
+        return jax.tree_util.tree_map(lambda x: x[:n_rows], out)
+
+    return padded
 
 
 def project_capacity(a, lower, upper, mask, capacity,
@@ -803,7 +858,8 @@ class FleetSolverProblem:
 
     def __init__(self, problem: SolverProblem, host_of: Mapping[str, str],
                  capacities: Mapping[str, float],
-                 bucketed: Union[bool, str] = "auto"):
+                 bucketed: Union[bool, str] = "auto",
+                 shard: Union[bool, int, str, None] = "auto"):
         """``host_of``: service name (spec.name) -> host name;
         ``capacities``: host name -> resource budget C_h;
         ``bucketed=True`` keeps one bucket per power-of-two layout key;
@@ -813,9 +869,16 @@ class FleetSolverProblem:
         a neighboring layout and collapses tiny fleets (every bucket below
         ``_AUTO_BUCKET_MIN_HOSTS`` hosts, little padding to save) to the
         single shared layout — at those sizes the per-bucket compiled scan
-        costs more on XLA-CPU than the padding it avoids."""
+        costs more on XLA-CPU than the padding it avoids.
+
+        ``shard`` spreads each bucket's vmapped solve over devices
+        (``shard_rows``): ``"auto"`` (default) uses every available device
+        and degrades to the plain single-device vmap when
+        ``jax.device_count() == 1``; results are byte-identical either
+        way."""
         self.problem = problem
         self.bucketed = bucketed
+        self.n_shards = resolve_shard(shard)
         self.hosts: Tuple[str, ...] = tuple(sorted(
             {host_of[s.name] for s in problem.specs}))
         hidx = {h: b for b, h in enumerate(self.hosts)}
@@ -857,10 +920,12 @@ class FleetSolverProblem:
 
         # topology fingerprint: callers caching compiled pipelines key on
         # this, so a rebalance-migrated fleet never reuses a stale trace.
-        # The RESOLVED bucket structure and the per-host capacities are part
-        # of it — capacity degradation mid-run must not reuse a trace whose
-        # budget constants were baked in at the old values.
+        # The RESOLVED bucket structure, the per-host capacities and the
+        # shard count are part of it — capacity degradation mid-run must not
+        # reuse a trace whose budget constants were baked in at the old
+        # values, and a device-count change re-keys the sharded program.
         self.layout_key: tuple = (
+            ("shards", self.n_shards),
             tuple(tuple(bk.hosts) for bk in self.buckets),
             tuple((h, tuple(svc_of_host[b]), float(self.capacities[b]))
                   for b, h in enumerate(self.hosts)))
@@ -898,9 +963,11 @@ class FleetSolverProblem:
         keys = jax.random.split(key, len(self.hosts))
         parts, scores = [], []
         for bk in self.buckets:
-            A, sc = jax.vmap(partial(solve, n_services=bk.n_services_max))(
-                bk.split(x0g), keys[bk.host_idx], bk.tables,
-                bk.gather_models(sm), rps[bk.svc_take], bk.caps)
+            vf = shard_rows(
+                jax.vmap(partial(solve, n_services=bk.n_services_max)),
+                len(bk.hosts), self.n_shards)
+            A, sc = vf(bk.split(x0g), keys[bk.host_idx], bk.tables,
+                       bk.gather_models(sm), rps[bk.svc_take], bk.caps)
             parts.append(bk.gather_back(A))
             scores.append(sc)
         return self.join(parts), jnp.concatenate(scores)[self._score_perm]
@@ -1012,8 +1079,10 @@ class PlacementProblem:
     def __init__(self, problem: SolverProblem,
                  subsets: Sequence[Sequence[int]],
                  capacities: Sequence[float],
-                 bucketed: Union[bool, str] = "auto"):
+                 bucketed: Union[bool, str] = "auto",
+                 shard: Union[bool, int, str, None] = "auto"):
         self.problem = problem
+        self.n_shards = resolve_shard(shard)
         self.subsets: List[Tuple[int, ...]] = [
             tuple(int(i) for i in s) for s in subsets]
         self.capacities = np.asarray(capacities, np.float32)
@@ -1053,9 +1122,11 @@ class PlacementProblem:
         keys = jax.random.split(key, max(self.n_candidates, 1))
         parts = []
         for bk in self.buckets:
-            _, sc = jax.vmap(partial(solve, n_services=bk.n_services_max))(
-                bk.split(x0g), keys[bk.host_idx], bk.tables,
-                bk.gather_models(sm), rps[bk.svc_take], bk.caps)
+            vf = shard_rows(
+                jax.vmap(partial(solve, n_services=bk.n_services_max)),
+                len(bk.hosts), self.n_shards)
+            _, sc = vf(bk.split(x0g), keys[bk.host_idx], bk.tables,
+                       bk.gather_models(sm), rps[bk.svc_take], bk.caps)
             parts.append(sc)
         return jnp.concatenate(parts) if parts \
             else jnp.zeros((0,), jnp.float32)

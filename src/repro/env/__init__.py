@@ -1,9 +1,10 @@
 from .profiles import (CV_PROFILE, PC_PROFILE, QR_PROFILE, ServiceProfile,
                        lm_profile, paper_knowledge, paper_profiles)
-from .scenarios import (HostSpec, churn_scenario, failover_scenario,
-                        hetero_environment, hetero_knowledge, mixed_patterns,
-                        parse_churn, sim_slo_budget, tiered_hosts,
-                        two_tier_environment, two_tier_hosts)
+from .scenarios import (HostSpec, backlog_scenario, churn_scenario,
+                        failover_scenario, hetero_environment,
+                        hetero_knowledge, mixed_patterns, parse_churn,
+                        sim_slo_budget, tiered_hosts, two_tier_environment,
+                        two_tier_hosts)
 from .simulator import ChurnEvent, ContainerPool, EdgeEnvironment, \
     SimulatedService
 from .workloads import bursty, constant, diurnal
@@ -12,7 +13,8 @@ __all__ = ["ServiceProfile", "QR_PROFILE", "CV_PROFILE", "PC_PROFILE",
            "lm_profile", "paper_profiles", "paper_knowledge",
            "ChurnEvent", "ContainerPool", "EdgeEnvironment",
            "SimulatedService", "bursty", "constant", "diurnal", "HostSpec",
-           "churn_scenario", "failover_scenario", "hetero_environment",
+           "backlog_scenario", "churn_scenario", "failover_scenario",
+           "hetero_environment",
            "hetero_knowledge", "mixed_patterns", "parse_churn",
            "sim_slo_budget", "tiered_hosts", "two_tier_environment",
            "two_tier_hosts"]

@@ -138,6 +138,37 @@ def sim_slo_budget(objective: float = 0.95, good_threshold: float = 0.6,
                      good_threshold=good_threshold).scaled(scale)
 
 
+def backlog_scenario(duration_s: float = 600.0, seed: int = 0,
+                     burst_start: float = 180.0, burst_end: float = 360.0,
+                     base_rps: float = 40.0, burst_rps: float = 600.0,
+                     latency_target: float = 25.0
+                     ) -> Tuple[EdgeEnvironment, Dict, object]:
+    """Burst-driven backlog world for the LATENCY SLI (carried ROADMAP
+    debt: every committed scenario ran the availability SLI).
+
+    One QR service on one 8-core device under a square-wave load: the
+    mid-run burst (``burst_rps``, far above the device's ~230 RPS
+    achievable throughput) builds a queue backlog that sustains above
+    ``latency_target`` for the whole burst window, then the load drops
+    back to ``base_rps`` and the bounded buffer drains within seconds.
+    Returns (environment, knowledge-for-RASK, a sim-scaled
+    ``SLOBudget(sli="latency")`` on the ``queue`` backlog column) — driven
+    under a hold agent the fast-burn alert fires mid-burst once >72% of
+    its long window's scrapes are bad and clears shortly after recovery
+    (tests/test_obs.py exercises exactly that fire/clear cycle)."""
+    from ..obs import SLOBudget
+
+    def square(t: float) -> float:
+        return burst_rps if burst_start <= t < burst_end else base_rps
+
+    env = EdgeEnvironment([QR_PROFILE], capacity={"cores": 8.0},
+                          patterns={"qr-detector": square}, seed=seed)
+    budget = SLOBudget(objective=0.95, sli="latency",
+                       latency_metric="queue",
+                       latency_target=latency_target).scaled(1.0 / 20.0)
+    return env, hetero_knowledge([QR_PROFILE]), budget
+
+
 # -- churn scenarios: the fleet changing mid-run ------------------------------
 
 def failover_scenario(duration_s: float = 1200.0, seed: int = 0,

@@ -292,6 +292,13 @@ class CycleRecord:
     alerts: int = 0
     max_burn: float = 0.0
     budget_consumed: float = 0.0
+    # pipelined decide (RaskConfig(pipeline=True)): the blocked time splits
+    # into the async dispatch of THIS cycle's solve and the collect of the
+    # previous one — runtime_s is their sum, the solve itself overlaps the
+    # apply + scrape window
+    pipelined: bool = False
+    dispatch_s: float = 0.0
+    collect_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -634,7 +641,10 @@ class EdgeEnvironment:
                     alerts=info.burn_alerts if info else 0,
                     max_burn=info.max_burn if info else 0.0,
                     budget_consumed=fleet_burn.budget_consumed
-                    if fleet_burn else 0.0)
+                    if fleet_burn else 0.0,
+                    pipelined=info.pipelined if info else False,
+                    dispatch_s=info.dispatch_s if info else 0.0,
+                    collect_s=info.collect_s if info else 0.0)
                 history.append(rec)
                 if on_cycle:
                     on_cycle(rec)

@@ -81,6 +81,17 @@ def main(argv=None):
                          "'fail:edge-1@420,degrade:edge-0@300:0.5,"
                          "arrive:gemma3-1b@500,depart:SID@700' "
                          "(env.scenarios.parse_churn grammar)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined decide (dispatch-then-collect): each "
+                         "cycle's solve runs on device while the plan is "
+                         "applied and telemetry scraped, hiding the solve "
+                         "latency behind the control interval (plans lag "
+                         "observations by one cycle)")
+    ap.add_argument("--shard", default="auto",
+                    help="device sharding of the bucketed fleet solves: "
+                         "'auto' (default, all devices; plain vmap on one "
+                         "device), 'off', or an int cap — results are "
+                         "byte-identical either way")
     ap.add_argument("--adapt-budget", action="store_true",
                     help="online solver budget adaptation (shrink PGD "
                          "iters/starts at steady state, restore on load "
@@ -128,11 +139,15 @@ def main(argv=None):
                               patterns=patterns, seed=args.seed,
                               replicas=args.replicas, hosts=args.hosts)
     knowledge = {p.type: dict(p.knowledge) for p in profiles}
+    shard = "auto" if args.shard == "auto" else (
+        False if args.shard.lower() in ("off", "false", "0")
+        else int(args.shard))
     agent = RASKAgent(env.platform, knowledge,
                       RaskConfig(xi=20, eta=0.0, backend=args.backend,
                                  resource="chips",
                                  rebalance_every=args.rebalance_every,
-                                 adapt_budget=args.adapt_budget),
+                                 adapt_budget=args.adapt_budget,
+                                 pipeline=args.pipeline, shard=shard),
                       seed=args.seed)
     accountant = None
     registry = None

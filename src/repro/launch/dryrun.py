@@ -1,8 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# APPEND to any user-set XLA_FLAGS (never clobber), and only when a device
+# count is not already forced — a user running with their own
+# --xla_force_host_platform_device_count (e.g. the sharded-solver parity
+# tests) wins
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512"
+                               ).strip()
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST stay first: jax locks the device count on first
+The lines above MUST stay first: jax locks the device count on first
 init, and the production meshes need 512 placeholder host devices. Do not
 import this module from tests (they should see 1 device).
 

@@ -290,6 +290,39 @@ def test_accountant_fire_and_clear():
         s.sample_total for s in acct.states.values())
 
 
+def test_latency_sli_fast_burn_fires_and_clears_on_backlog_burst():
+    """The latency SLI end to end (ISSUE 7 satellite; carried ROADMAP debt:
+    every committed scenario ran the availability SLI): a mid-run load
+    burst far above the device's achievable throughput builds a sustained
+    queue backlog, the fast-burn alert on the ``queue > latency_target``
+    predicate fires during the burst window and clears after the load
+    drops and the bounded buffer drains."""
+    from repro.env import backlog_scenario
+
+    env, _, budget = backlog_scenario(duration_s=600.0, seed=0)
+    assert budget.sli == "latency"
+    acct = SLOAccountant(env.platform, budget)
+
+    class _Hold:          # apply nothing; just advance the alert clocks
+        def cycle(self, t):
+            acct.update(t)
+            return None
+
+    env.run(_Hold(), duration_s=600.0, cycle_s=10.0)
+    fast = [(t, ev) for t, _sid, pol, ev in acct.alert_log if pol == "fast"]
+    fires = [t for t, ev in fast if ev == "fire"]
+    clears = [t for t, ev in fast if ev == "clear"]
+    assert fires, f"fast-burn alert never fired: {acct.alert_log}"
+    assert clears, f"fast-burn alert never cleared: {acct.alert_log}"
+    # quiet under the base load, firing only once the burst's backlog has
+    # burned >72% of the long window, clearing after the burst ends
+    assert 180.0 <= fires[0] <= 360.0, fires
+    assert clears[0] > 360.0, clears
+    assert clears[0] <= 600.0
+    sid = sorted(acct.states)[0]
+    assert acct.states[sid].bad_total > 0          # the ledger remembers
+
+
 def test_accountant_survives_missing_service():
     """A service disappearing from the platform (host failure) must not
     break the update pass; its budget history stays on the ledger."""
