@@ -259,8 +259,11 @@ def scenario_bench(reps: int = None, duration: float = None) -> dict:
         traces0 = dict(TRACE_COUNTS)
         for _ in range(3):            # steady state: decides must not retrace
             agent.decide(agent.observe(env.t))
+        # h2d_delta_rows is a runtime transfer counter that legitimately
+        # moves every streaming cycle; traces AND design-window uploads
+        # must both stay flat
         recompiles += sum(TRACE_COUNTS[k] - traces0.get(k, 0)
-                          for k in TRACE_COUNTS)
+                          for k in TRACE_COUNTS if k != "h2d_delta_rows")
     rts = np.concatenate([r["runtime_ms"] for r in runs])
     fls = np.concatenate([r["fulfillment"] for r in runs])
     return {

@@ -22,13 +22,26 @@ instruments every stage of the fused batched cycle engine at |S| in
   (fit+solve+project+noise on device) vs the pre-PR-3 SLSQP default
   (``decide_slsqp_us``) and the seed loop path (``decide_loop_us``).
 
+The ``fit_phase`` sweep (ISSUE 8) breaks the fit stage into its transfer
+phases — ``pack`` (host buffer fill), ``upload`` (host->device put) and
+``update`` (the compiled device work) — for the pre-PR batch path (full
+design-window rebuild + upload every cycle) against the streaming
+device-resident Gram engine (rank-1 delta push), up to |S|=96.  Synthetic
+paper-shaped relations, no agent training: the fit phase depends only on
+the plan geometry and the window size.
+
 All timings are steady-state (post jit warm-up) medians.  The artifact also
 records jit trace counts over the timed window — zero recompiles after the
-first cycle at fixed padding is an acceptance gate of the fused engine.
+first cycle at fixed padding is an acceptance gate of the fused engine, and
+(ISSUE 8) so is zero steady-state design-window uploads.
 """
 import numpy as np
 
-from repro.core.regression import TRACE_COUNTS
+import jax
+import jax.numpy as jnp
+
+from repro.core import regression
+from repro.core.regression import BatchedFitPlan, TRACE_COUNTS, pad_capacity
 from repro.core.solver import SolverProblem
 
 from . import common
@@ -83,6 +96,106 @@ def _fleet_sequential(agent):
 
 STAGES = ("telemetry", "tick", "fit", "solve", "solve_many", "decide",
           "baselines")
+
+FIT_S_LIST = (3, 9, 27, 96)   # fit_phase sweep (96: the ISSUE 8 gate point)
+FIT_WINDOW = 256              # steady-state window rows per relation
+                              # (long-running deployment, capped by
+                              # the agent's table retention)
+
+
+def fit_phase_bench(s_list=None, reps=None):
+    """Fit-phase transfer breakdown, batch vs streaming (ISSUE 8).
+
+    Per |S| (one paper-shaped relation per service: 3 features, degree 2,
+    a ``FIT_WINDOW``-row training window in a ``TrainingTable``), the full
+    steady-state fit phase as the agent runs it:
+
+    * batch   — the pre-PR path: ``export`` the whole finite-filtered
+      design window out of the table, ``pack`` it into the padded host
+      buffer, ``upload`` it, run the compiled window fit.
+    * stream  — the device-resident Gram engine: ``export`` only the rows
+      past the cursor (one, in steady state), ``pack`` the one-row delta,
+      ``upload`` it, run the compiled rank-1 push + solve-from-Gram.
+
+    ``*_fit_us`` are the end-to-end phase times (export+pack+upload+update
+    in one call, result blocked) — the number the regression gate tracks.
+    """
+    from repro.core.telemetry import TrainingTable
+
+    s_list = s_list if s_list is not None else FIT_S_LIST
+    reps = reps if reps is not None else REPS
+    rng = np.random.default_rng(0)
+    feats, target = ("cores", "quality", "rps"), "tp_max"
+    out = {}
+    for s_count in s_list:
+        plan = BatchedFitPlan(
+            [dict(n_features=3, degree=2, x_scale=[8.0, 1000.0, 100.0])
+             for _ in range(s_count)],
+            row_capacity=pad_capacity(FIT_WINDOW), ridge=1e-4)
+        table = TrainingTable(retention=pad_capacity(FIT_WINDOW))
+        sids = [f"s{i}" for i in range(s_count)]
+        for sid in sids:
+            for _ in range(FIT_WINDOW):
+                c, q, r = (float(rng.uniform(0.1, 8.0)),
+                           float(rng.uniform(100, 1000)),
+                           float(rng.uniform(1, 100)))
+                table.append(sid, {"cores": c, "quality": q, "rps": r,
+                                   target: 20 * c - q / 100.0
+                                   + float(rng.normal(0, 0.1))})
+        cursors = [table.appended(sid) - 1 for sid in sids]
+
+        def export_window():
+            return [table.design_matrix(sid, feats, target) for sid in sids]
+
+        def export_delta():
+            return [table.delta_matrix(sid, feats, target, cur)[:2]
+                    for sid, cur in zip(sids, cursors)]
+
+        data = export_window()
+        deltas = export_delta()
+        row = {}
+
+        # batch: full-window export + rebuild + upload + compiled fit
+        row["batch_export_us"] = _bench(export_window, reps)
+        row["batch_pack_us"] = _bench(lambda: plan.fill_packed(data), reps)
+        buf = plan.fill_packed(data)
+        row["batch_upload_us"] = _bench(
+            lambda: jax.device_put(buf).block_until_ready(), reps)
+        dev = jax.device_put(buf)
+        batch_fit = jax.jit(lambda b: regression.fit_batched_arrays(
+            *plan.unpack(b), plan._E, plan._tmask, plan._nterms,
+            plan._scale, plan.ridge, plan.max_degree))
+        row["batch_update_us"] = _bench(
+            lambda: batch_fit(dev).block_until_ready(), reps)
+        row["batch_fit_us"] = _bench(
+            lambda: batch_fit(jax.device_put(
+                plan.fill_packed(export_window()))).block_until_ready(),
+            reps)
+
+        # stream: one-row delta export + pack + upload + push-and-solve
+        state = plan.stream_rebuild(data)
+        row["stream_export_us"] = _bench(export_delta, reps)
+        row["stream_pack_us"] = _bench(lambda: plan.fill_delta(deltas, 1),
+                                       reps)
+        dbuf = plan.fill_delta(deltas, 1)
+        row["stream_upload_us"] = _bench(
+            lambda: jax.device_put(dbuf).block_until_ready(), reps)
+        ddev = jax.device_put(dbuf)
+        stream_fit = jax.jit(lambda st, b: plan.stream_fit_arrays(
+            plan.stream_update_arrays(st, *plan.unpack_delta(b, 1))))
+        row["stream_update_us"] = _bench(
+            lambda: stream_fit(state, ddev).block_until_ready(), reps)
+        row["stream_fit_us"] = _bench(
+            lambda: stream_fit(state, jax.device_put(
+                plan.fill_delta(export_delta(), 1))).block_until_ready(),
+            reps)
+
+        row["stream_speedup"] = row["batch_fit_us"] / row["stream_fit_us"]
+        # bytes moved host->device per steady-state cycle
+        row["batch_upload_bytes"] = int(buf.nbytes)
+        row["stream_upload_bytes"] = int(dbuf.nbytes)
+        out[f"S={s_count}"] = row
+    return out
 
 
 def run(s_list=None, reps=None, solve_reps=None, stages=None):
@@ -170,14 +283,24 @@ def run(s_list=None, reps=None, solve_reps=None, stages=None):
             row["solve_many_speedup"] = (row["solve_seq_us"]
                                          / row["solve_many_us"])
 
-        # decide: the full per-cycle agent latency, with recompile accounting
+        # decide: the full per-cycle agent latency, with recompile AND
+        # transfer accounting (h2d_* are runtime transfer counters, not jit
+        # traces: delta rows legitimately stream every cycle, but a
+        # steady-state design-window upload is a regression)
         if has("decide"):
             obs = agent.observe(env.t)
             traces0 = dict(TRACE_COUNTS)
             row["decide_us"] = _bench(lambda: agent.decide(obs), solve_reps)
             row["recompiles_during_decide"] = {
                 k: TRACE_COUNTS[k] - traces0.get(k, 0) for k in TRACE_COUNTS
-                if TRACE_COUNTS[k] - traces0.get(k, 0)}
+                if not k.startswith("h2d_")
+                and TRACE_COUNTS[k] - traces0.get(k, 0)}
+            row["design_uploads_during_decide"] = (
+                TRACE_COUNTS["h2d_design_upload"]
+                - traces0.get("h2d_design_upload", 0))
+            row["delta_rows_during_decide"] = (
+                TRACE_COUNTS["h2d_delta_rows"]
+                - traces0.get("h2d_delta_rows", 0))
         if has("decide") and has("baselines"):
             obs_s = agent_s.observe(env_s.t)
             obs_l = agent_l.observe(env_l.t)
@@ -189,12 +312,26 @@ def run(s_list=None, reps=None, solve_reps=None, stages=None):
             row["decide_speedup_vs_slsqp"] = (row["decide_slsqp_us"]
                                               / row["decide_us"])
         results[f"S={s_count}"] = row
+    if has("fit"):
+        results["fit_phase"] = fit_phase_bench(reps=reps)
     common.save(ARTIFACT, results)
     return results
 
 
 def report(results) -> None:
+    fit_phase = results.get("fit_phase") or {}
+    for key, row in fit_phase.items():
+        print(f"e7[fit-phase,{key}],{row['stream_fit_us']:.0f},"
+              f"batch={row['batch_fit_us']:.0f}us"
+              f" speedup={row['stream_speedup']:.2f}x"
+              f" bytes={row['stream_upload_bytes']}"
+              f"/{row['batch_upload_bytes']}"
+              f" pack={row['stream_pack_us']:.0f}"
+              f" upload={row['stream_upload_us']:.0f}"
+              f" update={row['stream_update_us']:.0f}us")
     for key, row in results.items():
+        if key == "fit_phase":
+            continue
         for stage in ("telemetry_scrape", "telemetry_window", "tick"):
             print(f"e7[{stage},{key}],{row[stage + '_us']:.0f},")
         for stage in ("fit", "solve", "decide"):
@@ -214,6 +351,10 @@ def report(results) -> None:
                   f" speedup={row['decide_speedup_vs_slsqp']:.2f}x")
         rec = row.get("recompiles_during_decide") or {}
         print(f"e7[recompiles,{key}],0,{sum(rec.values())}")
+        if "design_uploads_during_decide" in row:
+            print(f"e7[steady-uploads,{key}],0,"
+                  f"{row['design_uploads_during_decide']}"
+                  f" delta_rows={row['delta_rows_during_decide']}")
 
 
 def main():

@@ -142,6 +142,11 @@ def burn_failover_bench(duration: float = None, seed: int = 0) -> dict:
                 and guard["cool"] == 0:
             guard["quiet"] += 1
             for k, v in tc.items():
+                # h2d_delta_rows is a runtime transfer counter that
+                # legitimately moves every streaming cycle; traces AND
+                # design-window uploads must both stay flat
+                if k == "h2d_delta_rows":
+                    continue
                 d = v - guard["tc"].get(k, 0)
                 if d:
                     guard["recompiles"][k] = \

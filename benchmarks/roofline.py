@@ -110,7 +110,90 @@ def rask_objective_rows(s_list=(3, 9, 27), k_starts=8):
     return out
 
 
+def dispatch_floor_rows(s_list=(3, 9), reps=100):
+    """Empirical host dispatch floor of the fused decide program (ISSUE 8).
+
+    The decide op is dispatch-bound (see ``rask_objective_rows``): its
+    device floors are tens of nanoseconds, so per-cycle latency is set by
+    how fast the host can launch it.  This measures the SAME compiled
+    program invoked two ways, at real agent shapes:
+
+    * jit — through the ``jax.jit`` python dispatcher (argument flatten,
+      signature hash, cache lookup, guard logic on every call);
+    * aot — ``jax.jit(f).lower(...).compile()`` once, then the compiled
+      executable called directly (what ``RaskConfig.aot`` ships and
+      ``RASKAgent.precompile`` warms).
+
+    Measured result (recorded in roofline_dispatch.json): on CPU jax the
+    WARM dispatch floor slightly favors the jit C++ fastpath (~10us) over
+    the direct ``Compiled.call`` python entry (~18us) — the AOT win is the
+    COLD start: ``warm_ms`` of trace+compile leaves the control loop
+    entirely (``precompile`` pays it from ShapeDtypeStructs before the
+    first cycle), so no decide ever stalls on a compile.  Zero-filled
+    inputs: the ridge term keeps the zero-Gram solve well-posed, and
+    dispatch cost is shape-dependent only."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks import common
+    from repro.core.rask import _AotFn
+
+    out = []
+    for s_count in s_list:
+        env = common.make_env(seed=0, replicas=max(s_count // 3, 1),
+                              capacity=8.0 * max(s_count // 3, 1))
+        agent = common.make_rask(env, 0)
+        cap = 64
+        key = (cap, agent._static_degrees())
+        agent._fit_plan = agent._make_plan(cap, key[1])
+        agent._fit_plan_key = key
+        k_cap = (agent._fit_plan.delta_capacity(0)
+                 if agent._streaming() else None)
+        fn = agent._build_fused_fn(k_cap)
+        if not isinstance(fn, _AotFn):      # aot disabled in this config
+            continue
+        avals = agent._decide_avals(k_cap)
+        zeros = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), avals)
+        jit_us = common.bench(
+            lambda: jax.block_until_ready(fn._jit(*zeros)), reps)
+        t0 = time.perf_counter()
+        fn.warm(*avals)
+        warm_ms = (time.perf_counter() - t0) * 1e3
+        aot_us = common.bench(
+            lambda: jax.block_until_ready(fn(*zeros)), reps)
+        # pure dispatch floor: a no-op program over the SAME argument tree
+        # (decide compute hides the delta in noise at small S; this isolates
+        # the host-side flatten/hash/lookup cost itself)
+        floor = _AotFn(lambda *a: jax.tree_util.tree_leaves(a)[-1])
+        floor_jit_us = common.bench(
+            lambda: jax.block_until_ready(floor._jit(*zeros)), reps)
+        floor.warm(*avals)
+        floor_aot_us = common.bench(
+            lambda: jax.block_until_ready(floor(*zeros)), reps)
+        out.append(dict(S=s_count, jit_us=jit_us, aot_us=aot_us,
+                        saved_us=jit_us - aot_us,
+                        saved_frac=(jit_us - aot_us) / jit_us,
+                        warm_ms=warm_ms,
+                        floor_jit_us=floor_jit_us,
+                        floor_aot_us=floor_aot_us))
+    return out
+
+
 def main():
+    dispatch = dispatch_floor_rows()
+    for r in dispatch:
+        print(f"roofline[dispatch,S={r['S']}],{r['aot_us']:.0f},"
+              f"jit={r['jit_us']:.0f}us saved={r['saved_us']:.0f}us"
+              f" ({100 * r['saved_frac']:.0f}%)"
+              f" cold-compile={r['warm_ms']:.0f}ms"
+              f" floor jit={r['floor_jit_us']:.0f}us"
+              f" aot={r['floor_aot_us']:.0f}us")
+    if dispatch:
+        (ART / "roofline_dispatch.json").write_text(
+            json.dumps(dispatch, indent=1))
     for r in rask_objective_rows():
         dom = max(r["compute_s"], r["memory_s"])
         print(f"roofline[rask_objective,S={r['S']},K={r['K']}],"

@@ -209,7 +209,15 @@ def check_e7() -> int:
     """Regression gate: a quick |S|=9 hot-path run vs the committed
     artifact — fail on a >1.5x ``decide_us`` regression (the gate headroom
     absorbs CI machine variance; a retired fast path blows straight
-    through it) or on ANY jit recompile during steady-state decides."""
+    through it), on ANY jit recompile during steady-state decides, or
+    (ISSUE 8) on ANY steady-state design-window upload — the streaming
+    Gram engine must keep moving only delta rows.  The fit-phase gate
+    re-runs the synthetic |S|=96 breakdown at full reps (the phase is a
+    ~2 ms host-side composite with +-15% run-to-run spread, so the
+    committed baseline is a median-of-medians): the streaming fit must
+    stay within 1.5x of the committed time and >= 2x faster than the
+    batch window-rebuild path — the batch/stream RATIO is the
+    load-independent regression signal."""
     from . import common, e7_hot_path
 
     committed = common.load("e7_hot_path")
@@ -227,10 +235,23 @@ def check_e7() -> int:
     ref = committed["S=9"]
     limit = 1.5 * ref["decide_us"]
     recompiles = sum((row.get("recompiles_during_decide") or {}).values())
-    ok = row["decide_us"] <= limit and recompiles == 0
+    uploads = row.get("design_uploads_during_decide", 0)
+    fit = e7_hot_path.fit_phase_bench(s_list=(96,), reps=20)["S=96"]
+    fit_ref = (committed.get("fit_phase") or {}).get("S=96")
+    fit_limit = 1.5 * fit_ref["stream_fit_us"] if fit_ref else float("inf")
+    ok = (row["decide_us"] <= limit and recompiles == 0 and uploads == 0
+          and fit_ref is not None
+          and fit["stream_fit_us"] <= fit_limit
+          and fit["stream_speedup"] >= 2.0)
     print(f"e7-check[decide],{row['decide_us']:.0f},"
           f"limit={limit:.0f}us committed={ref['decide_us']:.0f}us")
     print(f"e7-check[recompiles],0,{recompiles}")
+    print(f"e7-check[steady-uploads],0,{uploads}"
+          f" delta_rows={row.get('delta_rows_during_decide', 0)}")
+    print(f"e7-check[fit-phase],{fit['stream_fit_us']:.0f},"
+          f"limit={fit_limit:.0f}us speedup={fit['stream_speedup']:.2f}x"
+          f" (min 2.0x, committed "
+          f"{fit_ref['stream_speedup'] if fit_ref else 0:.2f}x)")
     print(f"e7-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
     return 0 if ok else 1
 

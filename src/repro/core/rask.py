@@ -76,6 +76,7 @@ from .platform import MUDAP
 from .regression import BatchedFitPlan, PolynomialModel, StackedModels, \
     TRACE_COUNTS, fit_batched_arrays, fit_polynomial, pad_capacity, \
     select_degree
+from .regression import GramFit, StreamState  # noqa: F401 (re-export)
 from .solver import FleetSolverProblem, PlacementProblem, ServiceSpec, \
     SolverProblem, cached_fn, pgd_solve
 from .telemetry import TrainingTable
@@ -108,6 +109,29 @@ class RaskConfig:
     # measures ~1.5-2x on the steady decide); select "pallas" only when
     # lowering to a real TPU/GPU backend.
     objective_impl: str = "reference"
+    # streaming device-resident fit engine: the padded design window lives
+    # ON DEVICE as per-relation rings + Gram accumulators (regression.py
+    # ``StreamState``); each cycle packs and uploads only the telemetry rows
+    # appended since the last cycle's cursor (steady state: ONE row per
+    # relation), and the ridge solve consumes the accumulators directly —
+    # the rebuild-and-upload of the full window (``fill_packed``) happens
+    # only on invalidation (churn/migration ``_topo_gen`` bumps, degree or
+    # row-bucket changes, training-table compaction overruns).  Zero
+    # steady-state design-matrix uploads, gated on
+    # ``TRACE_COUNTS["h2d_design_upload"]``.
+    streaming_fit: bool = True
+    # exact Gram recompute (from the device ring — still no upload) every N
+    # delta pushes, bounding float32 accumulate/evict drift; 0 disables
+    stream_resync_every: int = 64
+    # per-service TrainingTable retention (rows); rounded up to a power of
+    # two so the host window and the device ring evict in lockstep.  None
+    # keeps the seed's unbounded table.
+    table_retention: Optional[int] = 1024
+    # AOT-compile the fused decide (jax.jit(...).lower(...).compile()):
+    # compiled executables are called directly, skipping per-call jit
+    # dispatch resolution; ``RASKAgent.precompile`` warms layout buckets
+    # from ShapeDtypeStruct avals before the control loop starts
+    aot: bool = True
     # device sharding of the bucketed fleet/placement solves
     # (solver.shard_rows): "auto" (default) spreads each bucket's vmapped
     # solve over every available device and degrades to the plain
@@ -162,6 +186,63 @@ class RaskConfig:
     burn_weight_cap: float = 4.0    # max extra weight (see burn_weights)
 
 
+# host-side stand-in for "no new rows this cycle" (rebuild cycles push the
+# window via ``stream_rebuild`` and then run the delta program empty)
+_EMPTY_X = np.zeros((0, 1), np.float32)
+_EMPTY_Y = np.zeros((0,), np.float32)
+
+
+class _AotFn:
+    """Ahead-of-time-compiled jit wrapper for the fused decide.
+
+    ``jax.jit`` re-resolves its dispatch on every call (signature hashing,
+    cache lookup, guard logic); at edge problem sizes that per-call overhead
+    is a visible slice of the ~ms decide (benchmarks/roofline.py measures
+    it).  This wrapper lowers and compiles ONCE per concrete signature —
+    ``jax.jit(f).lower(*args).compile()`` — and then invokes the compiled
+    executable directly.  ``warm`` also accepts ``jax.ShapeDtypeStruct``
+    avals, so ``RASKAgent.precompile`` can move the whole trace+compile out
+    of the control loop without touching data.  A signature change falls
+    back to a fresh lower+compile; the fused-fn cache keys on everything
+    that changes shapes, so that is cold-path only."""
+
+    def __init__(self, fn, donate: Tuple[int, ...] = ()):
+        self._jit = jax.jit(fn, donate_argnums=donate)
+        self._compiled = None
+        self._sig = None
+
+    @staticmethod
+    def _sig_of(args) -> tuple:
+        return tuple((tuple(l.shape), np.dtype(l.dtype))
+                     for l in jax.tree_util.tree_leaves(args))
+
+    def warm(self, *args) -> None:
+        """Lower+compile for ``args`` (arrays OR ShapeDtypeStruct avals)."""
+        self._compiled = self._jit.lower(*args).compile()
+        self._sig = self._sig_of(args)
+
+    def export_roundtrip(self, *args):
+        """``jax.export`` round-trip of the underlying program: serialize,
+        deserialize, return the rehydrated callable — proof the compiled
+        decide survives a process boundary (AOT artifact caching).  Returns
+        None where the running jax lacks export support; callers keep the
+        in-process AOT path."""
+        try:
+            from jax import export as jax_export
+            avals = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(tuple(a.shape),
+                                               np.dtype(a.dtype)), args)
+            exp = jax_export.export(jax.jit(self._jit.__wrapped__))(*avals)
+            return jax_export.deserialize(exp.serialize()).call
+        except Exception:
+            return None
+
+    def __call__(self, *args):
+        if self._compiled is None or self._sig != self._sig_of(args):
+            self.warm(*args)
+        return self._compiled(*args)
+
+
 class RASKAgent(PlanningAgent):
     """The action-perception loop of Fig. 3 bound to one MUDAP platform
     (or a multi-host ``Fleet`` — anything with the plan/telemetry surface)."""
@@ -175,7 +256,12 @@ class RASKAgent(PlanningAgent):
         self.knowledge = knowledge
         self.cfg = config if config is not None else RaskConfig()
         self.rng = np.random.default_rng(seed)
-        self.table = TrainingTable()
+        # bounded training table: retention is rounded to a power of two so
+        # the host window and the streaming device ring evict in lockstep
+        ret = self.cfg.table_retention
+        self.table = TrainingTable(
+            retention=None if ret is None else pad_capacity(int(ret),
+                                                            minimum=1))
         self.rounds = -1            # Algo 1 line 2: first cycle -> 0
         self.services = platform.services()
         self.capacity = platform.capacity[self.cfg.resource]
@@ -200,6 +286,12 @@ class RASKAgent(PlanningAgent):
         self._row_capacity = 0      # padded-fit bucket (power-of-two growth)
         self._fit_plan: Optional[BatchedFitPlan] = None
         self._fit_plan_key = None
+        # streaming-fit state (``_prepare_fit``): the device-resident
+        # StreamState plus per-relation total-index cursors into the
+        # training table, the topology generation and plan key it was built
+        # against, per-relation window row counts, and the push counter
+        # driving the periodic exact resync
+        self._stream: Optional[dict] = None
         self._fused_fns: Dict[tuple, callable] = {}
         self._warm_keys: set = set()     # fused pipeline keys already compiled
         self._timed_first_solve = False  # classic-path compile accounting
@@ -429,26 +521,20 @@ class RASKAgent(PlanningAgent):
         # -- phase 2: fit + async-dispatch the next solve ---------------------
         dispatch_s = compile_s = 0.0
         used_starts = used_iters = 0
-        data = self._collect_fit_data()
-        if data is None:
+        prep = self._prepare_fit()
+        if prep is None:
             if collected is None:
                 self.stacked = None       # models incomplete: keep exploring
         else:
             seed = int(self.rng.integers(2 ** 31))
             x0 = self._x0()
-            fkey = self._fused_key()
-            cold = not (fkey in self._warm_keys and fkey in self._fused_fns)
+            fkey = self._fused_key(self._prep_k_cap(prep))
+            cold = (prep[0] == "batch" and self._streaming()) or \
+                not (fkey in self._warm_keys and fkey in self._fused_fns)
             plan = self._fit_plan
             td = time.perf_counter()
-            buf = plan.fill_packed(data)
-            out_dev, w_dev = self._fused_fn(fkey)(
-                jnp.asarray(buf), jnp.asarray(x0, jnp.float32),
-                jax.random.PRNGKey(seed),
-                jnp.asarray(self._rps_vector(obs)),
-                jnp.float32(self._eta_t()))
+            out_dev, w_dev, _ = self._dispatch_fused(prep, obs, seed, x0)
             dispatch_s = time.perf_counter() - td
-            self._warm_keys.add(fkey)
-            self._warm_keys &= set(self._fused_fns)
             self._pending = dict(out=out_dev, w=w_dev, plan=plan,
                                  dim=self.problem.dim, gen=self._topo_gen)
             used_starts, used_iters = self._budget_starts, self._budget_iters
@@ -579,8 +665,8 @@ class RASKAgent(PlanningAgent):
         re-invoking within the same ``decide`` reuses ``_cycle_draws`` so
         the re-run is byte-identical and the rng stream advances once."""
         if self.cfg.fused and self.cfg.backend == "pgd":
-            data = self._collect_fit_data()                 # lines 6-9
-            if data is None:
+            prep = self._prepare_fit()                      # lines 6-9
+            if prep is None:
                 self.stacked = None
                 self._last_solve_cold = False
                 return None
@@ -588,12 +674,16 @@ class RASKAgent(PlanningAgent):
                 self._cycle_draws = (int(self.rng.integers(2 ** 31)),
                                      self._x0())
             seed, x0 = self._cycle_draws
-            # cold = this pipeline variant will compile: never called, OR
-            # called before but since evicted from the bounded fn cache
-            fkey = self._fused_key()
-            self._last_solve_cold = not (fkey in self._warm_keys
-                                         and fkey in self._fused_fns)
-            return self._decide_fused(data, obs, seed, x0)
+            # cold = this pipeline variant will compile (never called, OR
+            # called before but since evicted from the bounded fn cache) —
+            # or a streaming rebuild cycle, which repacks and re-uploads
+            # the full design window (the re-run then measures the
+            # steady-state delta path)
+            fkey = self._fused_key(self._prep_k_cap(prep))
+            self._last_solve_cold = \
+                (prep[0] == "batch" and self._streaming()) or \
+                not (fkey in self._warm_keys and fkey in self._fused_fns)
+            return self._decide_fused(prep, obs, seed, x0)
         return self._classic_cycle(obs)
 
     # -- Eq. (3) --------------------------------------------------------------
@@ -619,36 +709,158 @@ class RASKAgent(PlanningAgent):
         return self._explore()
 
     # -- the fused single-dispatch cycle --------------------------------------
-    def _decide_fused(self, data, obs, seed: int, x0: np.ndarray
+    def _streaming(self) -> bool:
+        """Whether the device-resident streaming fit engine is active (it
+        rides inside the fused PGD pipeline)."""
+        return (self.cfg.streaming_fit and self.cfg.fused
+                and self.cfg.backend == "pgd")
+
+    def _prepare_fit(self):
+        """Fit inputs for the fused decide: ``("delta", deltas)`` with only
+        the rows appended since each relation's cursor (the streaming
+        steady state — O(new rows) host work, zero design-window uploads),
+        or ``("batch", data)`` with the full design window (non-streaming
+        mode, or a streaming rebuild after invalidation).  None while some
+        relation still lacks >= 3 usable rows (the agent keeps exploring).
+        """
+        streaming = self._streaming()
+        auto_due = self.cfg.auto_degree and \
+            self.rounds % self.cfg.auto_degree_every == 0
+        if streaming and not auto_due:
+            deltas = self._stream_deltas()
+            if deltas is not None:
+                return ("delta", deltas)
+        data = self._collect_fit_data()   # (re)builds plan, checks degrees
+        if data is None:
+            self._stream = None
+            return None
+        if streaming:
+            # an auto-degree pass that did NOT change the plan key leaves
+            # the stream state valid: keep pushing deltas
+            deltas = self._stream_deltas()
+            if deltas is not None:
+                return ("delta", deltas)
+        return ("batch", data)
+
+    def _stream_deltas(self):
+        """Pull the unseen training rows of every relation (cursor-driven
+        columnar delta export).  Returns the per-relation delta list, or
+        None when the stream state is missing/invalid — built against a
+        different topology generation or fit plan, a cursor lost rows to
+        table compaction, or the training window outgrew the device ring's
+        row bucket — in which case the caller rebuilds via the full
+        ``_collect_fit_data`` path (ONE counted design upload)."""
+        st = self._stream
+        if (st is None or st["gen"] != self._topo_gen
+                or st["plan_key"] != self._fit_plan_key
+                or self._fit_plan is None):
+            return None
+        ret = self.table.retention
+        deltas = []
+        max_rows = 0
+        for i, (sid, target, feats, scale) in enumerate(self._rel_static):
+            if st["cursors"][i] < self.table.evicted(sid):
+                return None               # compaction outran the cursor
+            Xd, Yd, cur = self.table.delta_matrix(sid, feats, target,
+                                                  st["cursors"][i])
+            st["cursors"][i] = cur
+            # window row estimate: usable rows only ever grow by the delta
+            # and never exceed the visible window; an overcount (NaN rows
+            # pushing usable rows out of the window) at worst forces one
+            # exact rebuild, which resets the estimate
+            n = st["rows"][i] + len(Yd)
+            n = min(n, self.table.count(sid) if ret is not None else n)
+            st["rows"][i] = n
+            max_rows = max(max_rows, n)
+            deltas.append((Xd, Yd))
+        if pad_capacity(max_rows) > self._row_capacity:
+            return None                   # window outgrew the device ring
+        return deltas
+
+    def _stream_rebuild(self, data) -> dict:
+        """Fresh device-resident stream state holding the current design
+        window (counts as ONE ``h2d_design_upload``), with cursors at each
+        relation's current append total."""
+        plan = self._fit_plan
+        return dict(
+            state=plan.stream_rebuild(data),
+            cursors=[self.table.appended(sid)
+                     for sid, *_ in self._rel_static],
+            rows=[len(Y) for _, Y in data],
+            gen=self._topo_gen, plan_key=self._fit_plan_key, pushes=0)
+
+    def _prep_k_cap(self, prep) -> Optional[int]:
+        """The delta-row bucket this prep will dispatch with (None = the
+        non-streaming full-window program)."""
+        if not self._streaming():
+            return None
+        kind, payload = prep
+        if kind == "batch":               # rebuild, then an empty push
+            return self._fit_plan.delta_capacity(0)
+        return self._fit_plan.delta_capacity(
+            max((len(Y) for _, Y in payload), default=1))
+
+    def _dispatch_fused(self, prep, obs, seed: int, x0: np.ndarray):
+        """Dispatch one fused decide (async — device futures out):
+        returns (out, w, fused key).  Streaming preps rebuild or rank-k
+        push the device-resident accumulators as a side effect; the state
+        pytree is donated to (and returned by) the compiled program."""
+        if not (isinstance(prep, tuple) and len(prep) == 2
+                and prep[0] in ("batch", "delta")):
+            prep = ("batch", prep)        # raw fit data (legacy call sites)
+        plan = self._fit_plan
+        kind, payload = prep
+        k_cap = self._prep_k_cap(prep)
+        fkey = self._fused_key(k_cap)
+        tail = (jnp.asarray(x0, jnp.float32), jax.random.PRNGKey(seed),
+                jnp.asarray(self._rps_vector(obs)),
+                jnp.float32(self._eta_t()))
+        if self._streaming():
+            if kind == "batch":
+                # invalidated (first fit, churn, plan change): rebuild the
+                # device window, then run the steady-state program empty
+                self._stream = self._stream_rebuild(payload)
+                payload = [(_EMPTY_X, _EMPTY_Y)] * plan.n_relations
+            st = self._stream
+            dbuf = plan.fill_delta(payload, k_cap)
+            out, w, state = self._fused_fn(fkey, k_cap)(
+                st["state"], jnp.asarray(dbuf), *tail)
+            st["state"] = state
+            st["pushes"] += 1
+            every = self.cfg.stream_resync_every
+            if every and st["pushes"] % every == 0:
+                # exact Gram recompute from the device ring (no upload):
+                # bounds incremental float32 drift on arbitrarily long runs
+                st["state"] = plan.stream_resync(st["state"])
+        else:
+            buf = plan.fill_packed(payload)
+            out, w = self._fused_fn(fkey, None)(jnp.asarray(buf), *tail)
+        self._warm_keys.add(fkey)  # compiled now — future decides are warm
+        self._warm_keys &= set(self._fused_fns)   # evicted keys re-cool
+        return out, w, fkey
+
+    def _decide_fused(self, prep, obs, seed: int, x0: np.ndarray
                       ) -> Tuple[np.ndarray, np.ndarray, float]:
         """Fit + solve + project + NOISE as ONE compiled dispatch; returns
         (optimum for the warm-start cache, noised plan vector, score)."""
-        plan = self._fit_plan
-        buf = plan.fill_packed(data)
-        eta = self._eta_t()
-        key = self._fused_key()
-        out, w = self._fused_fn(key)(
-            jnp.asarray(buf),
-            jnp.asarray(x0, jnp.float32), jax.random.PRNGKey(seed),
-            jnp.asarray(self._rps_vector(obs)), jnp.float32(eta))
+        out, w, _ = self._dispatch_fused(prep, obs, seed, x0)
         out = np.asarray(out)     # the cycle's ONE device->host transfer
-        self._warm_keys.add(key)  # compiled now — future decides are warm
-        self._warm_keys &= set(self._fused_fns)   # evicted keys re-cool
-        self.stacked = plan.stacked(w)   # weights stay device-resident
+        self.stacked = self._fit_plan.stacked(w)   # weights stay on device
         self._models_view = None
         d = self.problem.dim
         return out[:d], out[d:2 * d], float(out[2 * d:].sum())
 
-    def _fused_key(self) -> tuple:
+    def _fused_key(self, k_cap: Optional[int] = None) -> tuple:
         fp = self.fleet_problem
-        return (self._fit_plan_key, self._budget_starts, self._budget_iters,
-                self.cfg.pgd_lr, self.cfg.objective_impl,
+        return (self._fit_plan_key, k_cap, self._budget_starts,
+                self._budget_iters, self.cfg.pgd_lr, self.cfg.objective_impl,
                 None if fp is None else fp.layout_key)
 
-    def _fused_fn(self, key: tuple):
-        return cached_fn(self._fused_fns, key, self._build_fused_fn)
+    def _fused_fn(self, key: tuple, k_cap: Optional[int] = None):
+        return cached_fn(self._fused_fns, key,
+                         lambda: self._build_fused_fn(k_cap))
 
-    def _build_fused_fn(self):
+    def _build_fused_fn(self, k_cap: Optional[int] = None):
         plan = self._fit_plan
         problem = self.problem
         fp = self.fleet_problem
@@ -658,14 +870,7 @@ class RASKAgent(PlanningAgent):
                         objective_impl=cfg.objective_impl)
         capacity = jnp.float32(self.capacity)
 
-        def core(buf, x0, key, rps, eta):
-            TRACE_COUNTS["decide_fused"] += 1      # trace-time only
-            Xp, Yp, rmask = plan.unpack(buf)
-            w = fit_batched_arrays(Xp, Yp, rmask, plan._E, plan._tmask,
-                                   plan._nterms, plan._scale, plan.ridge,
-                                   plan.max_degree)
-            sm = StackedModels(w, plan._E, plan._tmask, plan._scale,
-                               plan.max_degree, ())
+        def tail(sm, x0, key, rps, eta):
             k_solve, k_noise = jax.random.split(key)
             if fp is None:
                 a, score = solve(x0, k_solve, problem.tables, sm, rps,
@@ -677,12 +882,36 @@ class RASKAgent(PlanningAgent):
             # NOISE (Eq. 5): sigma = |a| * eta (the paper's worked example;
             # see _noise for why not the printed (a*eta)^2)
             noised = a + jax.random.normal(k_noise, a.shape) * jnp.abs(a) * eta
-            return jnp.concatenate([a, noised, scores]), w
+            return jnp.concatenate([a, noised, scores])
 
-        # donate the padded design-matrix buffer: the pipeline may reuse
-        # its device memory in place (CPU XLA cannot and would warn on
-        # every compile, so donation is accelerator-only)
-        donate = () if jax.default_backend() == "cpu" else (0,)
+        if k_cap is None:
+            def core(buf, x0, key, rps, eta):
+                TRACE_COUNTS["decide_fused"] += 1      # trace-time only
+                Xp, Yp, rmask = plan.unpack(buf)
+                w = fit_batched_arrays(Xp, Yp, rmask, plan._E, plan._tmask,
+                                       plan._nterms, plan._scale, plan.ridge,
+                                       plan.max_degree)
+                sm = StackedModels(w, plan._E, plan._tmask, plan._scale,
+                                   plan.max_degree, ())
+                return tail(sm, x0, key, rps, eta), w
+        else:
+            def core(state, dbuf, x0, key, rps, eta):
+                TRACE_COUNTS["decide_fused"] += 1      # trace-time only
+                state = plan.stream_update_arrays(
+                    state, *plan.unpack_delta(dbuf, k_cap))
+                w = plan.stream_fit_arrays(state)      # solve from Gram
+                sm = StackedModels(w, plan._E, plan._tmask, plan._scale,
+                                   plan.max_degree, ())
+                return tail(sm, x0, key, rps, eta), w, state
+
+        # donate the design-matrix buffer — and in streaming mode the
+        # accumulator state, which the program updates in place and returns
+        # (CPU XLA cannot donate and would warn on every compile, so
+        # donation is accelerator-only)
+        donate = () if jax.default_backend() == "cpu" else \
+            ((0,) if k_cap is None else (0, 1))
+        if cfg.aot:
+            return _AotFn(core, donate)
         return jax.jit(core, donate_argnums=donate)
 
     # -- the two-stage (reference / baseline) cycle ---------------------------
@@ -779,14 +1008,88 @@ class RASKAgent(PlanningAgent):
         self._row_capacity = max(self._row_capacity, pad_capacity(max_rows))
         key = (self._row_capacity, tuple(degrees))
         if self._fit_plan_key != key:
-            self._fit_plan = BatchedFitPlan(
-                [dict(n_features=len(feats), degree=d, x_scale=scale,
-                      service=sid, target=target, features=feats)
-                 for (sid, target, feats, scale), d
-                 in zip(self._rel_static, degrees)],
-                row_capacity=self._row_capacity, ridge=self.cfg.ridge)
+            self._fit_plan = self._make_plan(self._row_capacity, degrees)
             self._fit_plan_key = key
         return data
+
+    def _make_plan(self, cap: int, degrees: Sequence[int]) -> BatchedFitPlan:
+        return BatchedFitPlan(
+            [dict(n_features=len(feats), degree=d, x_scale=scale,
+                  service=sid, target=target, features=feats)
+             for (sid, target, feats, scale), d
+             in zip(self._rel_static, degrees)],
+            row_capacity=cap, ridge=self.cfg.ridge)
+
+    def _static_degrees(self) -> Tuple[int, ...]:
+        """Per-relation degrees as they stand WITHOUT new data: the
+        configured/per-service defaults, or the last auto-selected value —
+        what ``precompile`` keys its warmed layout buckets on."""
+        cfg = self.cfg
+        out = []
+        for sid, *_ in self._rel_static:
+            if cfg.delta_per_service and sid in cfg.delta_per_service:
+                out.append(cfg.delta_per_service[sid])
+            else:
+                out.append(self._degrees.get(sid, cfg.delta))
+        return tuple(out)
+
+    def _decide_avals(self, k_cap: Optional[int]) -> tuple:
+        """ShapeDtypeStruct avals of one fused decide dispatch — what
+        ``precompile`` lowers against (no data touched)."""
+        plan = self._fit_plan
+        f32 = np.dtype(np.float32)
+        sds = jax.ShapeDtypeStruct
+        tail = (sds((self.problem.dim,), f32),
+                jax.eval_shape(lambda: jax.random.PRNGKey(0)),
+                sds((len(self.services),), f32), sds((), f32))
+        if k_cap is None:
+            n = plan.n_relations * plan.row_capacity * (plan.f_max + 2)
+            return (sds((n,), f32),) + tail
+        state = jax.eval_shape(plan.stream_init)
+        nd = plan.n_relations * k_cap * (plan.f_max + 2)
+        return (state, sds((nd,), f32)) + tail
+
+    def precompile(self, layouts: Sequence[int] = (64,)) -> List[tuple]:
+        """AOT-warm the fused decide for the given layout buckets BEFORE
+        the control loop runs, so cold-start trace+compile leaves the loop
+        entirely.
+
+        Each layout is a training-window row count; it is bucketed by
+        ``pad_capacity`` and compiled against the CURRENT topology, solver
+        budgets and (static) per-service degrees — exactly the pipeline
+        variants the loop will dispatch.  With ``RaskConfig.aot`` the
+        warmup lowers pure ``ShapeDtypeStruct`` avals
+        (``jax.jit(...).lower(...).compile()`` — no data, no uploads);
+        without it, throwaway zero buffers execute the jitted pipeline
+        once.  Returns the warmed fused-fn keys; no-op off the fused PGD
+        path."""
+        if not (self.cfg.fused and self.cfg.backend == "pgd"):
+            return []
+        saved = (self._fit_plan, self._fit_plan_key, self._row_capacity)
+        warmed: List[tuple] = []
+        try:
+            for rows in layouts:
+                cap = pad_capacity(int(rows))
+                key = (cap, self._static_degrees())
+                if self._fit_plan_key != key:
+                    self._fit_plan = self._make_plan(cap, key[1])
+                    self._fit_plan_key = key
+                k_cap = self._fit_plan.delta_capacity(0) \
+                    if self._streaming() else None
+                fkey = self._fused_key(k_cap)
+                fn = self._fused_fn(fkey, k_cap)
+                avals = self._decide_avals(k_cap)
+                if isinstance(fn, _AotFn):
+                    fn.warm(*avals)
+                else:
+                    zeros = jax.tree_util.tree_map(
+                        lambda s: jnp.zeros(s.shape, s.dtype), avals)
+                    jax.block_until_ready(fn(*zeros))
+                self._warm_keys.add(fkey)
+                warmed.append(fkey)
+        finally:
+            self._fit_plan, self._fit_plan_key, self._row_capacity = saved
+        return warmed
 
     def _degree(self, sid: str, X, Y, scale) -> int:
         if self.cfg.delta_per_service and sid in self.cfg.delta_per_service:
@@ -977,6 +1280,7 @@ class RASKAgent(PlanningAgent):
         self._models_view = None
         self._fit_plan = None
         self._fit_plan_key = None
+        self._stream = None               # device window follows the plan
         for sid in list(self._models_loop):
             if sid not in set(self.services):
                 self._models_loop.pop(sid)

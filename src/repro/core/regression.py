@@ -45,7 +45,7 @@ import collections
 import dataclasses
 import itertools
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,15 @@ import numpy as np
 # jit trace counters (incremented at *trace* time, i.e. on compilation of a
 # new shape/static combination) — the no-recompile regression tests assert
 # these stay flat across cycles once the padded shapes stabilize.
+#
+# Two RUNTIME counters live in the same Counter (incremented per call, not
+# per trace), because they gate *transfers* rather than compiles:
+#   * ``h2d_design_upload`` — every host->device upload of a full padded
+#     design-matrix window (``BatchedFitPlan.fill``/``fill_packed`` and the
+#     streaming engine's rebuild push).  The streaming fit's zero-upload
+#     guarantee is "this counter stays flat across steady-state cycles".
+#   * ``h2d_delta_rows``    — telemetry rows pushed through the streaming
+#     delta path (the O(new rows) uploads that REPLACE the full windows).
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
@@ -266,6 +275,40 @@ def fit_batched_arrays(Xp, Yp, row_mask, exponents, term_mask, n_terms,
 _fit_batched = jax.jit(fit_batched_arrays, static_argnames=("max_degree",))
 
 
+class StreamState(NamedTuple):
+    """Device-resident streaming-fit accumulators for one ``BatchedFitPlan``.
+
+    The expanded design rows live in a per-relation ring (newest
+    ``row_capacity`` rows win, same window as ``BatchedFitPlan.fill``), and
+    the Gram system (``gram`` = Phi^T Phi, ``xty`` = Phi^T y) is maintained
+    incrementally by rank-k pushes of only the NEW telemetry rows — the
+    ridge solve (``stream_fit_arrays``) consumes the accumulators directly,
+    so a steady-state refit costs O(new rows) host work and uploads no
+    design-matrix window.  A NamedTuple, hence a pytree: the whole state
+    threads through (and is donated to) the fused decide program.
+    """
+
+    phi: jnp.ndarray     # (R, C, T_max) expanded rows (term-masked), ring
+    y: jnp.ndarray       # (R, C)        targets, same ring order
+    gram: jnp.ndarray    # (R, T_max, T_max) running Phi^T Phi
+    xty: jnp.ndarray     # (R, T_max)        running Phi^T y
+    count: jnp.ndarray   # (R,) int32        rows ever pushed per relation
+
+
+@dataclasses.dataclass
+class GramFit:
+    """A Gram-backed fit handle: (plan, streaming state) standing in for
+    fitted ``StackedModels``.  ``SolverProblem.stack``/``FleetSolverProblem``
+    accept it anywhere models are expected — the ridge solve happens lazily
+    on device from the accumulators (no design-matrix rebuild)."""
+
+    plan: "BatchedFitPlan"
+    state: StreamState
+
+    def stacked_models(self) -> StackedModels:
+        return self.plan.stream_stacked(self.state)
+
+
 def pad_capacity(n: int, minimum: int = 64) -> int:
     """Fixed-capacity bucketing for padded design matrices: the next power of
     two >= n (>= ``minimum``), so row growth recompiles only O(log N) times."""
@@ -330,6 +373,8 @@ class BatchedFitPlan:
         self._Xp = self._buf[:nx].reshape(r_count, row_capacity, self.f_max)
         self._Yp = self._buf[nx:nx + ny].reshape(r_count, row_capacity)
         self._rmask = self._buf[nx + ny:].reshape(r_count, row_capacity)
+        # streaming-fit scratch: per-k_cap delta buffers + per-plan jits
+        self._stream_fns: Dict[object, object] = {}
 
     def fill(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -338,6 +383,7 @@ class BatchedFitPlan:
         newest ``row_capacity`` rows win if N_r exceeds it) and return
         (Xp, Yp, row_mask) views — the fused decide uploads these once and
         donates the device buffers to the compiled pipeline."""
+        TRACE_COUNTS["h2d_design_upload"] += 1    # runtime transfer counter
         self._Xp[:] = 0.0
         self._Yp[:] = 0.0
         self._rmask[:] = 0.0
@@ -382,6 +428,183 @@ class BatchedFitPlan:
         metadata — no host transfer."""
         return StackedModels(w, self._E, self._tmask, self._scale,
                              self.max_degree, self.labels)
+
+    # -- streaming fit engine (device-resident Gram accumulators) -------------
+    #
+    # The batch path above rebuilds and uploads the full padded window every
+    # call; the streaming path keeps the window ON DEVICE (``StreamState``)
+    # and per cycle packs/uploads only the rows appended since the caller's
+    # cursor.  ``fit_batched_arrays`` stays the parity oracle: a stream state
+    # holding the same window rows solves the same ridge system (same
+    # scale-aware lambda) to float32 accumulation order.
+
+    def stream_init(self) -> StreamState:
+        """Fresh all-zero accumulators (created on device — no upload)."""
+        r, c, t = self.n_relations, self.row_capacity, self.t_max
+        return StreamState(
+            phi=jnp.zeros((r, c, t), jnp.float32),
+            y=jnp.zeros((r, c), jnp.float32),
+            gram=jnp.zeros((r, t, t), jnp.float32),
+            xty=jnp.zeros((r, t), jnp.float32),
+            count=jnp.zeros((r,), jnp.int32))
+
+    def delta_capacity(self, k: int) -> int:
+        """Power-of-two bucket for a delta push of up to ``k`` rows (>= 1,
+        <= row_capacity) — steady-state cycles append one row per relation,
+        so the bucket pins to 1 and the update program never retraces."""
+        return min(pad_capacity(max(int(k), 1), minimum=1), self.row_capacity)
+
+    def fill_delta(self, deltas: Sequence[Tuple[np.ndarray, np.ndarray]],
+                   k_cap: int) -> np.ndarray:
+        """Pack only the NEW rows (one (X (k_r, F_r), Y (k_r,)) pair per
+        relation, in plan order; newest ``row_capacity`` win) into a flat
+        delta buffer for ``k_cap`` — the streaming analogue of
+        ``fill_packed``, O(new rows) instead of O(window).
+
+        A FRESH buffer per call, never a reused one: jax on CPU may alias
+        numpy inputs zero-copy and executes asynchronously, so repacking a
+        shared buffer races the previous push's device reads (observed as
+        corrupted delta masks under forced multi-device CPU).  The buffer
+        is tiny (k_cap is 1 in steady state) and ``np.zeros`` is calloc —
+        cheaper than re-zeroing a cached one."""
+        r, f = self.n_relations, self.f_max
+        nx, ny = r * k_cap * f, r * k_cap
+        buf = np.zeros(nx + 2 * ny, np.float32)
+        Xd = buf[:nx].reshape(r, k_cap, f)
+        Yd = buf[nx:nx + ny].reshape(r, k_cap)
+        dmask = buf[nx + ny:].reshape(r, k_cap)
+        total = 0
+        for i, (X, Y) in enumerate(deltas):
+            if not (isinstance(X, np.ndarray) and X.ndim == 2
+                    and X.dtype == np.float32):
+                X = np.atleast_2d(np.asarray(X, np.float32))
+            if not (isinstance(Y, np.ndarray) and Y.ndim == 1
+                    and Y.dtype == np.float32):
+                Y = np.asarray(Y, np.float32).reshape(-1)
+            n = min(len(Y), k_cap)
+            if n:
+                Xd[i, :n, :X.shape[1]] = X[-n:]
+                Yd[i, :n] = Y[-n:]
+                dmask[i, :n] = 1.0
+            total += n
+        TRACE_COUNTS["h2d_delta_rows"] += total   # runtime transfer counter
+        return buf
+
+    def unpack_delta(self, dbuf, k_cap: int):
+        """Flat (traced) delta buffer -> (Xd, Yd, dmask)."""
+        r, f = self.n_relations, self.f_max
+        nx, ny = r * k_cap * f, r * k_cap
+        return (dbuf[:nx].reshape(r, k_cap, f),
+                dbuf[nx:nx + ny].reshape(r, k_cap),
+                dbuf[nx + ny:].reshape(r, k_cap))
+
+    def stream_update_arrays(self, state: StreamState, Xd, Yd, dmask
+                             ) -> StreamState:
+        """Rank-k accumulator push (traced, composable into fused pipelines).
+
+        Per relation: expand the (masked) new rows, subtract the ring rows
+        they overwrite from the Gram system (eviction — the training window
+        is the newest ``row_capacity`` rows, exactly ``fill``'s), add the
+        new contributions, and scatter the rows into the ring.  Rows beyond
+        ``dmask`` scatter out of bounds and are dropped.  Requires
+        k_cap <= row_capacity (``fill_delta`` enforces it)."""
+        TRACE_COUNTS["stream_update"] += 1        # trace-time only
+        cap, d = self.row_capacity, self.max_degree
+
+        def one(phi_r, y_r, G, b, count, X, Y, dm, e, tm, xs):
+            phi_new = _expand_gather(X / xs, e, d) * tm[None, :]
+            phi_new = phi_new * dm[:, None]                   # (k, T)
+            y_new = Y * dm
+            pos = count + jnp.arange(X.shape[0], dtype=jnp.int32)
+            slot = jnp.where(dm > 0, pos % cap, cap)          # OOB -> dropped
+            evict = ((dm > 0) & (pos >= cap)).astype(phi_new.dtype)
+            take = jnp.clip(slot, 0, cap - 1)
+            phi_old = phi_r[take] * evict[:, None]
+            y_old = y_r[take] * evict
+            G = G + phi_new.T @ phi_new - phi_old.T @ phi_old
+            b = b + phi_new.T @ y_new - phi_old.T @ y_old
+            phi_r = phi_r.at[slot].set(phi_new, mode="drop")
+            y_r = y_r.at[slot].set(y_new, mode="drop")
+            return phi_r, y_r, G, b, count + jnp.sum(dm).astype(jnp.int32)
+
+        phi, y, gram, xty, count = jax.vmap(one)(
+            state.phi, state.y, state.gram, state.xty, state.count,
+            Xd, Yd, dmask, self._E, self._tmask, self._scale)
+        return StreamState(phi, y, gram, xty, count)
+
+    def stream_resync_arrays(self, state: StreamState) -> StreamState:
+        """Recompute the Gram system exactly from the device ring (traced).
+
+        The incremental add/subtract drifts at float32 epsilon per push;
+        a periodic resync (still zero host->device transfers — the ring IS
+        the window) keeps the accumulated error bounded regardless of run
+        length."""
+        TRACE_COUNTS["stream_resync"] += 1        # trace-time only
+        cap = self.row_capacity
+
+        def one(phi_r, y_r, count):
+            valid = (jnp.arange(cap) < jnp.minimum(count, cap)
+                     ).astype(phi_r.dtype)
+            pm = phi_r * valid[:, None]
+            return pm.T @ pm, pm.T @ (y_r * valid)
+
+        gram, xty = jax.vmap(one)(state.phi, state.y, state.count)
+        return StreamState(state.phi, state.y, gram, xty, state.count)
+
+    def stream_fit_arrays(self, state: StreamState) -> jnp.ndarray:
+        """Ridge solve straight from the accumulators (traced) — the same
+        scale-aware lambda as ``fit_batched_arrays`` (trace(G) IS trace(A)),
+        with zero design-matrix work."""
+        TRACE_COUNTS["fit_gram"] += 1             # trace-time only
+        ridge = self.ridge
+
+        def one(G, b, nt):
+            lam = ridge * (1.0 + jnp.trace(G) / nt)
+            A = G + lam * jnp.eye(G.shape[0], dtype=G.dtype)
+            return jnp.linalg.solve(A, b)
+
+        return jax.vmap(one)(state.gram, state.xty,
+                             self._nterms.astype(jnp.float32))
+
+    # host-side conveniences (each jitted once per plan) --------------------
+    def _stream_jit(self, name: str, build):
+        fn = self._stream_fns.get(name)
+        if fn is None:
+            fn = self._stream_fns[name] = build()
+        return fn
+
+    def stream_push(self, state: StreamState,
+                    deltas: Sequence[Tuple[np.ndarray, np.ndarray]]
+                    ) -> StreamState:
+        """Standalone rank-k push: pack ``deltas`` and update on device."""
+        k_cap = self.delta_capacity(max((len(np.atleast_1d(Y)) for _, Y
+                                         in deltas), default=1))
+        dbuf = self.fill_delta(deltas, k_cap)
+        fn = self._stream_jit(("push", k_cap), lambda: jax.jit(
+            lambda st, b: self.stream_update_arrays(
+                st, *self.unpack_delta(b, k_cap))))
+        return fn(state, jnp.asarray(dbuf))
+
+    def stream_rebuild(self, data: Sequence[Tuple[np.ndarray, np.ndarray]]
+                       ) -> StreamState:
+        """Fresh state holding the newest ``row_capacity`` rows of ``data``
+        — the recovery path after churn/migration invalidates the state.
+        This IS a full design-window upload and counts as one."""
+        TRACE_COUNTS["h2d_design_upload"] += 1    # runtime transfer counter
+        return self.stream_push(self.stream_init(), data)
+
+    def stream_resync(self, state: StreamState) -> StreamState:
+        fn = self._stream_jit("resync",
+                              lambda: jax.jit(self.stream_resync_arrays))
+        return fn(state)
+
+    def stream_fit(self, state: StreamState) -> StackedModels:
+        """Solve the accumulators into ``StackedModels`` (device-resident)."""
+        fn = self._stream_jit("fit", lambda: jax.jit(self.stream_fit_arrays))
+        return self.stacked(fn(state))
+
+    def stream_stacked(self, state: StreamState) -> StackedModels:
+        return self.stream_fit(state)
 
 
 def fit_batched(relations: Sequence[dict], ridge: float = 1e-6,

@@ -273,7 +273,18 @@ def pgd_solve(x0, key, tables: ProblemTables, sm: StackedModels, rps,
     still cover the basins that matter.
     """
     lo, hi, mask = tables.lower, tables.upper, tables.resource_mask
-    grad_fn = jax.grad(objective_from_tables)
+    if objective_impl == "reference":
+        grad_fn = jax.grad(objective_from_tables)
+    else:
+        # route the ascent gradient through the SAME kernel that scores the
+        # candidates (the Pallas forward carries a custom VJP with an
+        # analytic backward — kernels/ops.py): with a plain
+        # ``jax.grad(objective_from_tables)`` the scores and the gradients
+        # would silently come from different implementations
+        def grad_fn(a, tables_, sm_, rps_, n_services_):
+            return jax.grad(lambda a1: jnp.sum(score_candidates(
+                a1[None, :], tables_, sm_, rps_, n_services_,
+                objective_impl, interpret)))(a)
     lr_t = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.arange(iters) / iters)) \
         + 1e-3
 
@@ -449,6 +460,11 @@ class SolverProblem:
         stacked pytree, in this problem's global relation order."""
         if isinstance(models, StackedModels):
             return models
+        if hasattr(models, "stacked_models"):
+            # Gram-backed fit handle (regression.GramFit): the ridge solve
+            # happens lazily on device from the streaming accumulators —
+            # no design-matrix rebuild between fit and solve
+            return models.stacked_models()
         return stack_models(
             [models[name][tgt] for _, name, tgt, _ in self.relations],
             [name for _, name, _, _ in self.relations])

@@ -29,6 +29,7 @@ shared, monotonically increasing timestamp vector — no per-sample dicts.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -316,52 +317,102 @@ class TrainingTable:
     so the regression sees (features X, target Y) pairs at cycle granularity.
     Storage is append-only column arrays (capacity-doubling, missing fields
     are NaN), so extracting a design matrix is a vectorized column gather.
+
+    ``retention`` bounds per-service host memory, mirroring ``_Ring``:
+    capacity grows geometrically up to 2x retention, then the newest
+    ``retention`` rows are compacted to the front — a thousand-service
+    week-long run holds |S| x retention rows, not |S| x cycles.  Row
+    identity survives compaction through *total* indices: ``appended``
+    counts every row ever written, ``evicted`` how many compaction has
+    dropped, and ``delta_matrix`` exports rows since a total-index cursor —
+    the feed of the streaming fit engine's rank-k pushes.
     """
 
-    def __init__(self, initial: int = 64):
+    def __init__(self, initial: int = 64, retention: Optional[int] = None):
         self._initial = initial
+        self._retention = retention
+
         self._cols: Dict[str, Dict[str, np.ndarray]] = {}
         self._n: Dict[str, int] = {}
+        self._base: Dict[str, int] = {}   # rows evicted by compaction
+
+    @property
+    def retention(self) -> Optional[int]:
+        return self._retention
 
     def append(self, service: str, row: Mapping[str, float]) -> None:
         cols = self._cols.setdefault(service, {})
         n = self._n.get(service, 0)
+        ret = self._retention
         cap = next(iter(cols.values())).shape[0] if cols else 0
         if n >= cap:                      # all columns share one capacity
-            new_cap = max(2 * cap, self._initial)
-            for k in cols:
-                cols[k] = np.concatenate(
-                    [cols[k], np.full(new_cap - cap, np.nan, np.float32)])
-            cap = new_cap
+            if ret is not None and cap >= 2 * ret:
+                # wrap: compact the newest ``retention`` rows to the front,
+                # re-NaN the tail (positions >= n must read as missing, or
+                # a later row lacking a key would leak the stale value)
+                for k in cols:
+                    cols[k][:ret] = cols[k][n - ret:n]
+                    cols[k][ret:] = np.nan
+                self._base[service] = self._base.get(service, 0) + (n - ret)
+                n = ret
+            else:
+                new_cap = max(2 * cap, self._initial)
+                if ret is not None:
+                    new_cap = min(new_cap, 2 * ret)
+                for k in cols:
+                    cols[k] = np.concatenate(
+                        [cols[k], np.full(new_cap - cap, np.nan, np.float32)])
+                cap = new_cap
         for k, v in row.items():
             if k not in cols:
                 cols[k] = np.full(cap, np.nan, np.float32)
             cols[k][n] = float(v)
         self._n[service] = n + 1
 
+    def _start(self, service: str) -> int:
+        """Physical index of the first VISIBLE row: like ``_Ring``, the
+        visible window is the newest ``retention`` rows even while the
+        backing arrays still hold up to 2x that between compactions."""
+        if self._retention is None:
+            return 0
+        return max(self._n.get(service, 0) - self._retention, 0)
+
     def rows(self, service: str) -> List[Dict[str, float]]:
         """Row-dict view (reconstructed; kept for seed-era consumers)."""
         cols = self._cols.get(service, {})
         n = self._n.get(service, 0)
         return [{k: float(arr[i]) for k, arr in cols.items()
-                 if np.isfinite(arr[i])} for i in range(n)]
+                 if np.isfinite(arr[i])}
+                for i in range(self._start(service), n)]
 
     def __len__(self) -> int:
-        return sum(self._n.values())
+        return sum(self.count(s) for s in self._n)
 
     def count(self, service: str) -> int:
-        return self._n.get(service, 0)
+        return self._n.get(service, 0) - self._start(service)
+
+    # -- total-index cursor surface (streaming-fit delta export) -------------
+    def appended(self, service: str) -> int:
+        """Rows ever written for ``service`` (compaction-independent)."""
+        return self._base.get(service, 0) + self._n.get(service, 0)
+
+    def evicted(self, service: str) -> int:
+        """Rows no longer visible (dropped by compaction or outside the
+        retention window) — cursors below this point have lost rows, so
+        delta consumers must rebuild instead of pushing."""
+        return self._base.get(service, 0) + self._start(service)
 
     def columns(self, service: str, names: Sequence[str]) -> np.ndarray:
-        """Stacked (n, len(names)) view of the named columns (NaN where a row
-        never recorded the field)."""
+        """Stacked (count, len(names)) view of the named columns over the
+        visible window (NaN where a row never recorded the field)."""
         n = self._n.get(service, 0)
+        lo = self._start(service)
         cols = self._cols.get(service, {})
-        out = np.full((n, len(names)), np.nan, np.float32)
+        out = np.full((n - lo, len(names)), np.nan, np.float32)
         for j, name in enumerate(names):
             arr = cols.get(name)
             if arr is not None:
-                out[:, j] = arr[:n]
+                out[:, j] = arr[lo:n]
         return out
 
     def design_matrix(self, service: str, features: Sequence[str], target: str):
@@ -374,3 +425,39 @@ class TrainingTable:
         X = mat[keep, :-1]
         Y = mat[keep, -1]
         return np.ascontiguousarray(X), np.ascontiguousarray(Y)
+
+    def delta_matrix(self, service: str, features: Sequence[str], target: str,
+                     since: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Columnar delta export: the (X, Y) rows appended at total indices
+        [since, appended), finite-filtered like ``design_matrix``.  Returns
+        (X, Y, new_cursor) with new_cursor = ``appended(service)``; pass it
+        back as the next call's ``since``.  A cursor below ``evicted`` has
+        lost rows to compaction — check before calling and rebuild instead.
+        """
+        base = self._base.get(service, 0)
+        n = self._n.get(service, 0)
+        names = list(features) + [target]
+        lo = min(max(since - base, 0), n)
+        cols = self._cols.get(service, {})
+        if n - lo <= 2:
+            # scalar fast path: steady-state deltas are 0-1 rows, and the
+            # column path below pays ~10us of array overhead per call —
+            # material when the agent exports |S| deltas every cycle
+            arrs = [cols.get(name) for name in names]
+            rows, ys = [], []
+            for r in range(lo, n):
+                vals = [float(a[r]) if a is not None else math.nan
+                        for a in arrs]
+                if all(map(math.isfinite, vals)):
+                    rows.append(vals[:-1])
+                    ys.append(vals[-1])
+            X = np.asarray(rows, np.float32).reshape(len(rows), len(names) - 1)
+            return X, np.asarray(ys, np.float32), base + n
+        mat = np.full((n - lo, len(names)), np.nan, np.float32)
+        for j, name in enumerate(names):
+            arr = cols.get(name)
+            if arr is not None:
+                mat[:, j] = arr[lo:n]
+        keep = np.isfinite(mat).all(axis=1)
+        return (np.ascontiguousarray(mat[keep, :-1]),
+                np.ascontiguousarray(mat[keep, -1]), base + n)

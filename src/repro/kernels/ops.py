@@ -13,8 +13,54 @@ from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from . import ref
+
+
+# pallas_call has no autodiff rule, so the PGD solver's grad would fail on
+# the kernel path.  Wrap the forward in a custom VJP whose backward is the
+# analytic jnp gradient (kernels/rask_objective.py::rask_objective_grad).
+# Every table rides as an explicit primal (a closure over jit tracers is not
+# lowerable); only the candidates get a real cotangent — the solver
+# differentiates w.r.t. ``A`` alone, so the tables' zero cotangents are
+# never consumed.
+@partial(jax.custom_vjp, nondiff_argnums=(13, 14, 15))
+def _rask_objective_kernel(A, rel_gather, w, exponents, term_mask, x_scale,
+                           slo_kind, slo_service, slo_weight, slo_target,
+                           slo_pidx, slo_ridx, rps, n_services, max_degree,
+                           interpret):
+    from .rask_objective import rask_objective_pallas
+    return rask_objective_pallas(
+        A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
+        slo_service, slo_weight, slo_target, slo_pidx, slo_ridx, rps,
+        n_services=n_services, max_degree=max_degree, interpret=interpret)
+
+
+def _rask_objective_fwd(A, rel_gather, w, exponents, term_mask, x_scale,
+                        slo_kind, slo_service, slo_weight, slo_target,
+                        slo_pidx, slo_ridx, rps, n_services, max_degree,
+                        interpret):
+    res = (A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
+           slo_service, slo_weight, slo_target, slo_pidx, slo_ridx, rps)
+    return _rask_objective_kernel(*res, n_services, max_degree, interpret), res
+
+
+def _zero_cotangent(x):
+    if jnp.issubdtype(jnp.result_type(x), jnp.floating):
+        return jnp.zeros_like(x)
+    return np.zeros(jnp.shape(x), jax.dtypes.float0)
+
+
+def _rask_objective_bwd(n_services, max_degree, interpret, res, ct):
+    from .rask_objective import rask_objective_grad
+    dA = rask_objective_grad(*res[:1], ct, *res[1:], n_services=n_services,
+                             max_degree=max_degree)
+    return (dA,) + tuple(_zero_cotangent(x) for x in res[1:])
+
+
+_rask_objective_kernel.defvjp(_rask_objective_fwd, _rask_objective_bwd)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "impl", "interpret"))
@@ -56,12 +102,10 @@ def rask_objective(A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
             A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
             slo_service, slo_weight, slo_target, slo_pidx, slo_ridx, rps,
             n_services=n_services, max_degree=max_degree)
-    from .rask_objective import rask_objective_pallas
-    return rask_objective_pallas(
+    return _rask_objective_kernel(
         A, rel_gather, w, exponents, term_mask, x_scale, slo_kind,
         slo_service, slo_weight, slo_target, slo_pidx, slo_ridx, rps,
-        n_services=n_services, max_degree=max_degree,
-        interpret=interpret or impl == "pallas_interpret")
+        n_services, max_degree, interpret or impl == "pallas_interpret")
 
 
 @partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))

@@ -130,3 +130,83 @@ def rask_objective_pallas(A, rel_gather, w, exponents, term_mask, x_scale,
       jnp.asarray(slo_target, jnp.float32)[None],
       jnp.asarray(rps, jnp.float32)[None])
     return out[:k_count]
+
+
+def rask_objective_grad(A, ct, rel_gather, w, exponents, term_mask, x_scale,
+                        slo_kind, slo_service, slo_weight, slo_target,
+                        slo_pidx, slo_ridx, rps, *, n_services: int,
+                        max_degree: int):
+    """Analytic VJP of the objective w.r.t. the candidates: cotangent
+    ``ct`` (K, S) -> dJ/dA (K, D).
+
+    The backward of the Pallas forward's custom VJP (kernels/ops.py): the
+    transposed one-hot matmuls retrace the forward's selection structure
+    (``ssel``/``rsel``/``psel`` scatter the per-SLO cotangent back onto
+    predictions and parameters, ``gsel`` scatters the per-feature cotangent
+    back onto the decision vector), and the polynomial product rule runs a
+    static O(F^2) loop over "product of the OTHER features" — exact at
+    zeros, no division by ``vals``.  Matches ``jax.grad`` of the reference
+    objective everywhere off the measure-zero ``ratio == 1`` clip boundary
+    (where both use the half-subgradient).  jnp only — it composes into the
+    PGD scan on any backend; a Pallas backward kernel would mirror the
+    forward's matmul structure if profiles ever demand it."""
+    A = jnp.asarray(A, jnp.float32)
+    ct = jnp.asarray(ct, jnp.float32)
+    k_count, dim = A.shape
+    r_count, t_count, f_count = exponents.shape
+    gsel = jax.nn.one_hot(rel_gather.reshape(-1), dim,
+                          dtype=jnp.float32)                  # (R*F, D)
+    psel = jax.nn.one_hot(slo_pidx, dim, dtype=jnp.float32)   # (Q, D)
+    rsel = jax.nn.one_hot(slo_ridx, r_count, dtype=jnp.float32)
+    ssel = jax.nn.one_hot(slo_service, n_services, dtype=jnp.float32)
+    wm = jnp.asarray(w, jnp.float32) * term_mask              # (R, T)
+    xinv = 1.0 / jnp.asarray(x_scale, jnp.float32)            # (R, F)
+    exps = jnp.asarray(exponents, jnp.int32)
+    weight = jnp.asarray(slo_weight, jnp.float32)
+    target = jnp.asarray(slo_target, jnp.float32)
+
+    # forward recompute (cheap at edge sizes; no residual plumbing): same
+    # powers-by-exponent-equality accumulation as the kernel, plus the
+    # power-rule derivative e * x^(e-1) selected from the same table
+    x = (A @ gsel.T).reshape(k_count, r_count, f_count) * xinv[None]
+    p = jnp.ones_like(x)
+    powers = [p]                                              # x^0..x^d
+    for _ in range(max_degree):
+        p = p * x
+        powers.append(p)
+    vals = jnp.zeros((k_count, r_count, t_count, f_count), jnp.float32)
+    dvals = jnp.zeros_like(vals)
+    for e in range(max_degree + 1):
+        sel = exps[None] == e
+        vals = jnp.where(sel, powers[e][:, :, None, :], vals)
+        if e:
+            dvals = jnp.where(sel, e * powers[e - 1][:, :, None, :], dvals)
+    terms = jnp.prod(vals, axis=-1)                           # (K, R, T)
+    preds = jnp.sum(terms * wm[None], axis=-1)                # (K, R)
+
+    is_p = (slo_kind == 0).astype(jnp.float32)                # (Q,)
+    is_c = (slo_kind == 1).astype(jnp.float32)
+    numer = is_p[None] * (A @ psel.T) + (1 - is_p)[None] * (preds @ rsel.T)
+    svc_rps = jnp.asarray(rps, jnp.float32) @ ssel.T          # (Q,)
+    denom = is_c * jnp.maximum(svc_rps * target, 1e-9) \
+        + (1 - is_c) * target                                 # (Q,)
+    ratio = numer / denom[None]                               # (K, Q)
+
+    # backward: out = (min(ratio, 1) * weight) @ ssel
+    dphi = (ct @ ssel.T) * weight[None]                       # (K, Q)
+    clip = jnp.where(ratio < 1.0, 1.0,
+                     jnp.where(ratio == 1.0, 0.5, 0.0))       # min() subgrad
+    dnumer = dphi * clip / denom[None]                        # (K, Q)
+    dA = (dnumer * is_p[None]) @ psel                         # (K, D)
+    dpreds = (dnumer * (1 - is_p)[None]) @ rsel               # (K, R)
+    dterms = dpreds[:, :, None] * wm[None]                    # (K, R, T)
+    dx = jnp.zeros_like(x)
+    for f in range(f_count):
+        other = jnp.ones_like(terms)
+        for f2 in range(f_count):
+            if f2 != f:
+                other = other * vals[..., f2]
+        dx = dx.at[..., f].add(
+            jnp.sum(dterms * dvals[..., f] * other, axis=-1))
+    dx = dx * xinv[None]                                      # xs = x / scale
+    return dA + dx.reshape(k_count, -1) @ gsel

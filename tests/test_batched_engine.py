@@ -172,8 +172,12 @@ def test_no_recompile_across_growing_table(rng):
     before = dict(TRACE_COUNTS)
     for n in range(5, 10):   # D grows by one row per cycle, same padding
         cycle(n)
+    # h2d_* are runtime TRANSFER counters, not trace counters: this batch
+    # path legitimately uploads its window every cycle (the streaming
+    # engine's zero-upload gate lives in test_streaming_fit.py)
     grew = {k: TRACE_COUNTS[k] - before.get(k, 0) for k in TRACE_COUNTS
-            if TRACE_COUNTS[k] - before.get(k, 0) > 0}
+            if not k.startswith("h2d_")
+            and TRACE_COUNTS[k] - before.get(k, 0) > 0}
     assert not grew, f"unexpected retraces: {grew}"
 
 
@@ -190,9 +194,13 @@ def test_rask_cycle_no_recompile():
     env.run(agent, duration_s=70)          # 4 explore + 3 solve cycles
     before = dict(TRACE_COUNTS)
     env.run(agent, duration_s=60)          # 6 more cycles, D grows each one
+    # delta rows legitimately stream every cycle; traces AND design-window
+    # uploads must both stay flat in the steady state
     grew = {k: TRACE_COUNTS[k] - before.get(k, 0) for k in TRACE_COUNTS
-            if TRACE_COUNTS[k] - before.get(k, 0) > 0}
-    assert not grew, f"unexpected retraces: {grew}"
+            if k != "h2d_delta_rows"
+            and TRACE_COUNTS[k] - before.get(k, 0) > 0}
+    assert not grew, f"unexpected retraces/uploads: {grew}"
+    assert TRACE_COUNTS["h2d_delta_rows"] > before.get("h2d_delta_rows", 0)
 
 
 # -- columnar ring buffer properties ----------------------------------------

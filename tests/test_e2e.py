@@ -48,8 +48,11 @@ def test_hetero_fleet_scenario_regression():
     env.run(agent, duration_s=350)            # explore + first (cold) solves
     traces0 = dict(TRACE_COUNTS)
     hist = env.run(agent, duration_s=150)     # steady state, padding stable
+    # h2d_delta_rows legitimately streams every cycle; traces AND
+    # design-window uploads must both stay flat
     recompiles = {k: TRACE_COUNTS[k] - traces0.get(k, 0)
-                  for k in TRACE_COUNTS if TRACE_COUNTS[k] - traces0.get(k, 0)}
+                  for k in TRACE_COUNTS if k != "h2d_delta_rows"
+                  and TRACE_COUNTS[k] - traces0.get(k, 0)}
     assert not recompiles, recompiles
     assert not any(h.explored for h in hist)
     assert np.mean([h.fulfillment for h in hist]) > 0.7
@@ -92,7 +95,8 @@ def test_failover_e2e_telemetry_survives_and_zero_recompiles():
         plan = agent.decide(agent.observe(env.t))
         assert env.platform.apply_plan(plan).ok
     rec = {k: TRACE_COUNTS[k] - traces0.get(k, 0)
-           for k in TRACE_COUNTS if TRACE_COUNTS[k] - traces0.get(k, 0)}
+           for k in TRACE_COUNTS if k != "h2d_delta_rows"
+           and TRACE_COUNTS[k] - traces0.get(k, 0)}
     assert not rec, rec
     # repeated batched scoring at a fixed topology: also trace-stable
     obs = agent.observe(env.t)
@@ -100,5 +104,6 @@ def test_failover_e2e_telemetry_survives_and_zero_recompiles():
     traces0 = dict(TRACE_COUNTS)
     agent.placement_scores(obs)
     rec = {k: TRACE_COUNTS[k] - traces0.get(k, 0)
-           for k in TRACE_COUNTS if TRACE_COUNTS[k] - traces0.get(k, 0)}
+           for k in TRACE_COUNTS if k != "h2d_delta_rows"
+           and TRACE_COUNTS[k] - traces0.get(k, 0)}
     assert not rec, rec
