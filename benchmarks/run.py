@@ -100,6 +100,13 @@ def _report_from_artifacts(name, common) -> bool:
             return False
         e9_slo_burn.report(r)
         return True
+    if name == "e10":
+        from . import e10_forecast
+        r = common.load(e10_forecast.ARTIFACT)
+        if not r:
+            return False
+        e10_forecast.report(r)
+        return True
     return False
 
 
@@ -316,6 +323,53 @@ def check_e9() -> int:
     return 0 if ok else 1
 
 
+def check_e10() -> int:
+    """Proactive-scaling gate vs the committed e10 artifact: a seeded
+    re-run of the committed configuration (deterministic trajectory) must
+    show the forecast gate cutting the bursty violation rate below the
+    reactive run's, never worsening the diurnal rate (small tolerance) or
+    the mean fulfillment on either trace, actually gating services in,
+    adding zero trailing-cycle recompiles and design-window uploads, and a
+    transfer arrival that keeps the fleet solving (zero post-arrival
+    exploration with priors, nonzero without — the blind spot the priors
+    close).  Full durations are used: the hybrid gate needs ``min_evals``
+    scored horizons past exploration before it can open."""
+    from . import common, e10_forecast
+
+    committed = common.load("e10_forecast")
+    if not committed or "proactive" not in committed:
+        print("e10-check,1,missing-committed-artifact")
+        return 1
+    e10_forecast.ARTIFACT = "e10_forecast_check"
+    res = e10_forecast.run()
+    ok = True
+    for src, tag in ((committed, "committed"), (res, "rerun")):
+        p, t = src["proactive"], src["transfer"]
+        bursty, diurnal = p["bursty"], p["diurnal"]
+        ok = (ok
+              and bursty["violation_reduction"] > 0.0
+              and diurnal["violation_reduction"] >= -0.02
+              and all(k["forecast"]["mean_fulfillment"]
+                      >= k["reactive"]["mean_fulfillment"] - 0.01
+                      for k in (bursty, diurnal))
+              and all(k["forecast"]["proactive_cycles"] > 0
+                      and k["forecast"]["tail_recompiles"] == 0
+                      and k["forecast"]["tail_uploads"] == 0
+                      for k in (bursty, diurnal))
+              and t["priors_skip_exploration"])
+        print(f"e10-check[{tag}],0,"
+              f"bursty_dviol={bursty['violation_reduction']:.3f}"
+              f" diurnal_dviol={diurnal['violation_reduction']:.3f}"
+              f" gated={bursty['forecast']['proactive_cycles']}"
+              f"/{diurnal['forecast']['proactive_cycles']}"
+              f" tail_recompiles="
+              f"{bursty['forecast']['tail_recompiles']}"
+              f"+{diurnal['forecast']['tail_recompiles']}"
+              f" transfer_skip={t['priors_skip_exploration']}")
+    print(f"e10-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -325,13 +379,13 @@ def main() -> None:
                     help="recompute even when an artifact exists")
     ap.add_argument("--check", default=None, metavar="SUITE",
                     help="regression gate: compare a quick run against the "
-                         "committed artifact (supported: e6, e7, e8, e9); "
-                         "exits nonzero on regression")
+                         "committed artifact (supported: e6, e7, e8, e9, "
+                         "e10); exits nonzero on regression")
     args = ap.parse_args()
 
     if args.check:
         checks = {"e6": check_e6, "e7": check_e7, "e8": check_e8,
-                  "e9": check_e9}
+                  "e9": check_e9, "e10": check_e10}
         if args.check not in checks:
             ap.error(f"--check supports {sorted(checks)}, got {args.check!r}")
         sys.exit(checks[args.check]())
@@ -339,7 +393,7 @@ def main() -> None:
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,
                    e6_scalability, e7_hot_path, e8_placement, e9_slo_burn,
-                   roofline)
+                   e10_forecast, roofline)
 
     if args.quick:
         common.REPS = 2
@@ -380,6 +434,13 @@ def main() -> None:
         e9_slo_burn.REPS = 10
         e9_slo_burn.FAILOVER_DURATION = 500.0
         e9_slo_burn.ARTIFACT = "e9_slo_burn_quick"
+        # CI-sized forecast smoke: shorter traces (the gate still opens —
+        # min_evals horizons past exploration fit inside 600 s) and an
+        # earlier arrival; separate artifact so the committed acceptance
+        # record keeps the full-duration violation numbers
+        e10_forecast.DURATION = 600.0
+        e10_forecast.TRANSFER_DURATION = 450.0
+        e10_forecast.ARTIFACT = "e10_forecast_quick"
 
     suites = {
         "e1": e1_convergence.main,
@@ -392,6 +453,7 @@ def main() -> None:
         "e7": e7_hot_path.main,
         "e8": e8_placement.main,
         "e9": e9_slo_burn.main,
+        "e10": e10_forecast.main,
         "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

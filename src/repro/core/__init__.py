@@ -6,6 +6,7 @@ from .api import (Agent, APPLIED, CLIPPED, CycleResult, DecisionInfo,
                   ScalingPlan, water_fill)
 from .elasticity import ApiDescription, ElasticityParameter, ServiceId
 from .fleet import Fleet
+from .forecast import LoadForecaster, fit_gru, gru_init, gru_predict
 from .platform import MUDAP, ServiceBackend
 from .rask import RaskConfig, RASKAgent
 from .regression import (BatchedFitPlan, PolynomialModel, StackedModels,
@@ -22,6 +23,7 @@ __all__ = [
     "water_fill", "Fleet",
     "ApiDescription", "ElasticityParameter", "ServiceId", "MUDAP",
     "ServiceBackend", "RaskConfig", "RASKAgent",
+    "LoadForecaster", "fit_gru", "gru_init", "gru_predict",
     "BatchedFitPlan", "PolynomialModel", "StackedModels", "fit_batched",
     "fit_polynomial", "mse", "polynomial_exponents", "select_degree",
     "stack_models", "SLO", "completion", "fulfillment",

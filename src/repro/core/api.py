@@ -214,6 +214,13 @@ class DecisionInfo:
     pipelined: bool = False
     dispatch_s: float = 0.0
     collect_s: float = 0.0
+    # proactive scaling (RaskConfig(forecast=True)): services whose hybrid
+    # gate solved against predicted-horizon load this cycle, and the worst
+    # rolling relative forecast error across gate-evaluated services —
+    # forecast_used == 0 with forecast on means every service fell back to
+    # reactive rps (gate closed: cold forecaster or error spike)
+    forecast_used: int = 0
+    forecast_err: float = 0.0
 
 
 @dataclasses.dataclass

@@ -72,6 +72,7 @@ import numpy as np
 
 # CycleResult is re-exported here for seed-era callers (it moved to api.py)
 from .api import CycleResult, DecisionInfo, PlanningAgent, ScalingPlan
+from .forecast import LoadForecaster
 from .platform import MUDAP
 from .regression import BatchedFitPlan, PolynomialModel, StackedModels, \
     TRACE_COUNTS, fit_batched_arrays, fit_polynomial, pad_capacity, \
@@ -184,6 +185,32 @@ class RaskConfig:
     # snapshot migration budget goes to the services burning fastest
     burn_control: bool = True
     burn_weight_cap: float = 4.0    # max extra weight (see burn_weights)
+    # proactive scaling (core/forecast.py): per-service AR(forecast_lags)
+    # load forecasters ride INSIDE the fused decide (their ridge fit and
+    # prediction are composed into the same single dispatch — zero extra
+    # programs, zero steady-state recompiles), and ``_rps_vector`` solves
+    # against predicted-horizon load wherever the hybrid gate trusts the
+    # forecaster: a service goes proactive only after forecast_min_evals
+    # scored predictions with rolling relative error <= forecast_gate_tol,
+    # and falls back to reactive rps the moment its error spikes.  Off the
+    # fused PGD path (classic/slsqp/fused=False) the flag is inert.
+    forecast: bool = False
+    horizon_s: float = 10.0         # how far ahead the solve looks
+    forecast_cycle_s: float = 10.0  # control interval (horizon_s -> steps)
+    forecast_lags: int = 8          # AR window length (rps history rows)
+    forecast_gate_tol: float = 0.35     # rolling rel. error gate threshold
+    forecast_min_evals: int = 3     # scored predictions before going proactive
+    forecast_err_window: int = 8    # rolling-error window (predictions)
+    # transfer learning across churn: at a service-set change the agent
+    # captures fleet-mean regression weights per service TYPE (and the
+    # forecaster's AR weights) and warm-starts every newly arrived
+    # service's relations from them through the prior-mean ridge — so an
+    # arrival no longer drops the whole fleet back into exploration while
+    # the new relations accumulate >= 3 rows.  The prior decays linearly
+    # to zero as transfer_min_rows real rows arrive.
+    transfer_priors: bool = True
+    transfer_strength: float = 1.0
+    transfer_min_rows: int = 3
 
 
 # host-side stand-in for "no new rows this cycle" (rebuild cycles push the
@@ -310,6 +337,23 @@ class RASKAgent(PlanningAgent):
         # stages
         self.accountant = None
         self.burn_states: Dict[str, object] = {}
+        # last-known per-service rps (fed by observe/_rps_vector): the
+        # fallback when a cycle's observe window is empty — a paused scrape
+        # mid-traffic must not be solved as zero load
+        self._last_rps: Dict[str, float] = {}
+        self._rps_scale: Dict[str, float] = {}   # running max (fc x_scale)
+        # proactive scaling state (RaskConfig(forecast=True)): the
+        # LoadForecaster bound to the current plan/topology and the fit
+        # input it prepared for this cycle's dispatch
+        self._forecast: Optional[LoadForecaster] = None
+        self._fc_prep = None
+        # transfer-learning priors captured at churn: fleet-mean regression
+        # weights keyed (service type, target, degree, n_features), the
+        # forecaster's per-type AR means, and the cached zero-prior arrays
+        # dispatched while no prior is live
+        self._transfer_priors: Dict[tuple, np.ndarray] = {}
+        self._fc_priors: Dict[str, np.ndarray] = {}
+        self._prior_zero: Optional[tuple] = None
         # cumulative counters for the metric registry (repro.obs.registry)
         self.moves_total = 0
         self.compile_s_total = 0.0
@@ -319,8 +363,10 @@ class RASKAgent(PlanningAgent):
         """Static per-relation fit metadata (feature names + scales), in the
         problem's global relation order."""
         self._rel_static: List[Tuple[str, str, Tuple[str, ...], np.ndarray]] = []
+        self._sid_types: Dict[str, str] = {}
         for _, sid, target, _ in self.problem.relations:
             svc = self.platform.service(sid)
+            self._sid_types[sid] = svc.sid.type
             feats = tuple(self.knowledge[svc.sid.type][target])
             scale = np.asarray(
                 [svc.api.parameter(f).max_value for f in feats], np.float32)
@@ -413,6 +459,11 @@ class RASKAgent(PlanningAgent):
             row.update(self.platform.assignment(sid))  # features = applied params
             self.table.append(sid, row)
             states[sid] = row
+            rps = row.get("rps")
+            if rps is not None and np.isfinite(rps):
+                self._last_rps[sid] = float(rps)
+                self._rps_scale[sid] = max(self._rps_scale.get(sid, 0.0),
+                                           float(rps))
         if self.accountant is not None:
             self.burn_states = self.accountant.update(t)
         return states
@@ -478,7 +529,8 @@ class RASKAgent(PlanningAgent):
             moves=len(moves),
             score_starts=self._score_starts if scored else 0,
             score_iters=self._score_iters if scored else 0,
-            burn_alerts=len(alerts), max_burn=self._max_burn())
+            burn_alerts=len(alerts), max_burn=self._max_burn(),
+            **self._fc_stats())
         return self._plan(noised)
 
     def _decide_pipelined(self, obs, moves, scored: bool,
@@ -508,8 +560,13 @@ class RASKAgent(PlanningAgent):
             out = np.asarray(pend["out"])   # the cycle's ONE transfer
             self.stacked = pend["plan"].stacked(pend["w"])
             self._models_view = None
-            d = pend["dim"]
-            collected = (out[:d], out[d:2 * d], float(out[2 * d:].sum()))
+            a, noised, score, pred = self._split_out(
+                out, pend["dim"], pend.get("n_fc", 0))
+            collected = (a, noised, score)
+            if pred is not None and self._forecast is not None:
+                # the prediction dispatched last cycle targets fc_target;
+                # settle() in this cycle's dispatch scores it when due
+                self._forecast.note(pend["fc_target"], pred)
         collect_s = time.perf_counter() - t0
         if collected is not None:
             a, noised, score = collected
@@ -528,15 +585,19 @@ class RASKAgent(PlanningAgent):
         else:
             seed = int(self.rng.integers(2 ** 31))
             x0 = self._x0()
-            fkey = self._fused_key(self._prep_k_cap(prep))
-            cold = (prep[0] == "batch" and self._streaming()) or \
+            fkey = self._fused_key(self._prep_k_cap(prep), self._fc_k_cap())
+            cold = self._prep_cold(prep) or \
                 not (fkey in self._warm_keys and fkey in self._fused_fns)
             plan = self._fit_plan
             td = time.perf_counter()
-            out_dev, w_dev, _ = self._dispatch_fused(prep, obs, seed, x0)
+            out_dev, w_dev, _, n_fc = self._dispatch_fused(prep, obs, seed, x0)
             dispatch_s = time.perf_counter() - td
+            fc = self._forecast
             self._pending = dict(out=out_dev, w=w_dev, plan=plan,
-                                 dim=self.problem.dim, gen=self._topo_gen)
+                                 dim=self.problem.dim, gen=self._topo_gen,
+                                 n_fc=n_fc,
+                                 fc_target=self.rounds +
+                                 (fc.horizon if fc is not None else 0))
             used_starts, used_iters = self._budget_starts, self._budget_iters
             if cold:
                 # a cold dispatch blocks for trace+compile: book it as
@@ -551,7 +612,7 @@ class RASKAgent(PlanningAgent):
                       score_iters=self._score_iters if scored else 0,
                       burn_alerts=len(alerts), max_burn=self._max_burn(),
                       pipelined=True, dispatch_s=dispatch_s,
-                      collect_s=collect_s)
+                      collect_s=collect_s, **self._fc_stats())
         if collected is None:
             # pipeline fill: no solved plan to emit yet — hold the cached
             # operating point if one exists, otherwise explore one round
@@ -676,12 +737,11 @@ class RASKAgent(PlanningAgent):
             seed, x0 = self._cycle_draws
             # cold = this pipeline variant will compile (never called, OR
             # called before but since evicted from the bounded fn cache) —
-            # or a streaming rebuild cycle, which repacks and re-uploads
-            # the full design window (the re-run then measures the
-            # steady-state delta path)
-            fkey = self._fused_key(self._prep_k_cap(prep))
-            self._last_solve_cold = \
-                (prep[0] == "batch" and self._streaming()) or \
+            # or a streaming rebuild cycle (structural OR forecaster),
+            # which repacks and re-uploads a full design window (the
+            # re-run then measures the steady-state delta path)
+            fkey = self._fused_key(self._prep_k_cap(prep), self._fc_k_cap())
+            self._last_solve_cold = self._prep_cold(prep) or \
                 not (fkey in self._warm_keys and fkey in self._fused_fns)
             return self._decide_fused(prep, obs, seed, x0)
         return self._classic_cycle(obs)
@@ -694,14 +754,25 @@ class RASKAgent(PlanningAgent):
 
     def _rps_vector(self, obs) -> np.ndarray:
         # rps comes from the observe() states already in hand — no extra
-        # per-service latest_metrics round-trips through the DB lock; a
-        # service with no samples in the window (paused scrapes) falls back
-        # to its last-known value rather than being solved as zero-load
+        # per-service latest_metrics round-trips through the DB lock.  A
+        # service with no sample in the window OR in the metrics store
+        # (paused scrapes, a registry gap right after churn) falls back to
+        # its LAST-KNOWN rps, not 0.0: solving against zero load mid-
+        # traffic scales the service to the floor and the next real cycle
+        # pays the violation spike.  The last-known cache is refreshed from
+        # every real finite reading (observe() and here).
         obs = obs or {}
-        return np.asarray(
-            [float(obs[sid]["rps"]) if "rps" in obs.get(sid, {})
-             else float(self.platform.latest_metrics(sid).get("rps", 0.0))
-             for sid in self.services], np.float32)
+        out = np.zeros(len(self.services), np.float32)
+        for i, sid in enumerate(self.services):
+            v = obs.get(sid, {}).get("rps")
+            if v is None or not np.isfinite(v):
+                v = self.platform.latest_metrics(sid).get("rps")
+            if v is None or not np.isfinite(v):
+                v = self._last_rps.get(sid, 0.0)
+            else:
+                self._last_rps[sid] = float(v)
+            out[i] = v
+        return out
 
     def _x0(self) -> np.ndarray:
         if self.cfg.cache and self._cached_x is not None:
@@ -716,12 +787,28 @@ class RASKAgent(PlanningAgent):
                 and self.cfg.backend == "pgd")
 
     def _prepare_fit(self):
-        """Fit inputs for the fused decide: ``("delta", deltas)`` with only
-        the rows appended since each relation's cursor (the streaming
-        steady state — O(new rows) host work, zero design-window uploads),
-        or ``("batch", data)`` with the full design window (non-streaming
+        """Fit inputs for the fused decide, structural AND (with
+        ``forecast=True``) forecaster: the structural prep is returned, the
+        forecaster's lands in ``self._fc_prep`` for ``_dispatch_fused`` —
+        both advance their cursors here, exactly once per decide (a cold
+        re-run's second call yields empty deltas, keeping re-runs
+        byte-identical)."""
+        prep = self._prepare_fit_structural()
+        if prep is not None and self._forecast_on():
+            fc = self._ensure_forecaster()
+            self._fc_prep = fc.prep(self.table, self._streaming())
+        else:
+            self._fc_prep = None
+        return prep
+
+    def _prepare_fit_structural(self):
+        """Structural fit inputs: ``("delta", deltas)`` with only the rows
+        appended since each relation's cursor (the streaming steady state —
+        O(new rows) host work, zero design-window uploads), or
+        ``("batch", data)`` with the full design window (non-streaming
         mode, or a streaming rebuild after invalidation).  None while some
-        relation still lacks >= 3 usable rows (the agent keeps exploring).
+        relation still lacks >= 3 usable rows AND has no transfer prior
+        (the agent keeps exploring).
         """
         streaming = self._streaming()
         auto_due = self.cfg.auto_degree and \
@@ -800,21 +887,187 @@ class RASKAgent(PlanningAgent):
         return self._fit_plan.delta_capacity(
             max((len(Y) for _, Y in payload), default=1))
 
+    # -- proactive scaling (core/forecast.py) ---------------------------------
+    def _forecast_on(self) -> bool:
+        """Whether the forecaster rides this agent's decide (it is composed
+        into the fused PGD pipeline; the classic/slsqp paths stay purely
+        reactive and ignore the flag)."""
+        return (self.cfg.forecast and self.cfg.fused
+                and self.cfg.backend == "pgd")
+
+    def _ensure_forecaster(self) -> LoadForecaster:
+        """The LoadForecaster bound to the CURRENT topology and fit plan —
+        rebuilt (carrying the hybrid gate's error history over when the
+        service set is unchanged) whenever either moves, so its row ring
+        grows in lockstep with the structural plan's bucket."""
+        cfg = self.cfg
+        key = (self._topo_gen, self._fit_plan_key, cfg.forecast_lags)
+        fc = self._forecast
+        if fc is not None and fc.bind_key == key:
+            return fc
+        horizon = max(1, int(round(cfg.horizon_s /
+                                   max(cfg.forecast_cycle_s, 1e-9))))
+        new = LoadForecaster(
+            self.services,
+            [self._sid_types.get(s, "") for s in self.services],
+            [max(self._rps_scale.get(s, 0.0), 1.0) for s in self.services],
+            cfg.forecast_lags, horizon,
+            row_capacity=self._fit_plan.row_capacity, ridge=cfg.ridge,
+            err_window=cfg.forecast_err_window,
+            gate_tol=cfg.forecast_gate_tol, min_evals=cfg.forecast_min_evals,
+            priors=self._fc_priors if cfg.transfer_priors else None,
+            prior_strength=cfg.transfer_strength,
+            min_prior_rows=cfg.transfer_min_rows)
+        if fc is not None and fc.services == new.services:
+            new.inherit_gate(fc)
+        new.bind_key = key
+        self._forecast = new
+        return new
+
+    def _fc_k_cap(self) -> Optional[int]:
+        """The forecaster's delta-row bucket for this cycle's dispatch
+        (None = no forecaster in the program, or the non-streaming batch
+        path — mirrors ``_prep_k_cap``)."""
+        if not (self._forecast_on() and self._fc_prep is not None
+                and self._streaming()):
+            return None
+        return self._forecast.delta_capacity(self._fc_prep)
+
+    def _prep_cold(self, prep) -> bool:
+        """Whether this cycle's dispatch includes a full design-window
+        rebuild+upload (structural or forecaster) — decide() then re-runs
+        so runtime_s keeps its steady-state meaning."""
+        if not self._streaming():
+            return False
+        if prep[0] == "batch":
+            return True
+        fp = self._fc_prep
+        return self._forecast_on() and fp is not None and fp[0] == "batch"
+
+    def _fc_stats(self) -> dict:
+        """DecisionInfo's forecast fields (empty off the forecast path, so
+        the dataclass defaults apply)."""
+        fc = self._forecast
+        if not self._forecast_on() or fc is None:
+            return {}
+        return dict(forecast_used=fc.last_used, forecast_err=fc.last_err)
+
+    @staticmethod
+    def _split_out(out, d: int, n_fc: int):
+        """Slice one fused-decide output vector — layout
+        [optimum (d) | noised plan (d) | predictions (n_fc) | scores] —
+        into (a, noised, score, pred-or-None)."""
+        a, noised = out[:d], out[d:2 * d]
+        pred = np.asarray(out[2 * d:2 * d + n_fc]) if n_fc else None
+        return a, noised, float(out[2 * d + n_fc:].sum()), pred
+
+    # -- transfer-learning priors (churn warm start) --------------------------
+    def _default_degree(self, sid: str) -> int:
+        """The degree relation ``sid`` will fit with absent new data (the
+        configured/per-service default or the last auto-selected value) —
+        what the prior key must match."""
+        if self.cfg.delta_per_service and sid in self.cfg.delta_per_service:
+            return self.cfg.delta_per_service[sid]
+        return self._degrees.get(sid, self.cfg.delta)
+
+    def _has_prior(self, sid: str, target: str,
+                   feats: Tuple[str, ...]) -> bool:
+        if not (self.cfg.transfer_priors and self._transfer_priors):
+            return False
+        return (self._sid_types.get(sid), target, self._default_degree(sid),
+                len(feats)) in self._transfer_priors
+
+    def _prior_args(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(w_prior (R, T_max), prior_lam (R,)) for this cycle's fit — the
+        prior-mean ridge inputs.  A relation whose service is still short
+        of ``transfer_min_rows`` table rows is pulled toward its captured
+        fleet-mean weights with linearly decaying strength; everything
+        else gets prior_lam = 0, which solves the EXACT unprior'd system
+        (regression.fit_batched_arrays) — and since both arrays are traced
+        data, prior decay never recompiles.  Once every prior has fully
+        decayed the capture dict is dropped and a cached zero pair is
+        dispatched (no per-cycle allocation on the steady path)."""
+        plan = self._fit_plan
+        R, T = plan.n_relations, plan.t_max
+        if self.cfg.transfer_priors and self._transfer_priors:
+            wp = np.zeros((R, T), np.float32)
+            pl = np.zeros((R,), np.float32)
+            minr = max(self.cfg.transfer_min_rows, 1)
+            live = False
+            for i, (sid, target, feats, _) in enumerate(self._rel_static):
+                w = self._transfer_priors.get(
+                    (self._sid_types.get(sid), target,
+                     self._default_degree(sid), len(feats)))
+                if w is None or w.shape[0] > T:
+                    continue
+                need = minr - min(self.table.count(sid), minr)
+                if need <= 0:
+                    continue
+                wp[i, :w.shape[0]] = w
+                pl[i] = self.cfg.transfer_strength * need / minr
+                live = True
+            if live:
+                return wp, pl
+            self._transfer_priors = {}    # fully decayed: back to zeros
+        z = self._prior_zero
+        if z is None or z[0] != (R, T):
+            z = self._prior_zero = ((R, T), np.zeros((R, T), np.float32),
+                                    np.zeros((R,), np.float32))
+        return z[1], z[2]
+
+    def _fleet_priors(self) -> Dict[tuple, np.ndarray]:
+        """Fleet-mean regression weights grouped by (service type, target,
+        degree, n_features) from the current stacked models — captured at
+        churn time (the one host sync is on the cold path) so arriving
+        services of a known type warm-start instead of re-triggering
+        fleet-wide exploration.  Falls back to the previously captured
+        priors when no fit has happened yet."""
+        if self.stacked is None or not self.stacked.labels:
+            return dict(self._transfer_priors)
+        W = np.asarray(self.stacked.w, np.float32)
+        groups: Dict[tuple, list] = {}
+        for i, (sid, target, _, degree, t, f) in enumerate(
+                self.stacked.labels):
+            key = (self._sid_types.get(sid), target, degree, f)
+            groups.setdefault(key, []).append(W[i, :t])
+        out = dict(self._transfer_priors)
+        for key, rows in groups.items():
+            out[key] = np.mean(np.stack(rows), axis=0)
+        return out
+
     def _dispatch_fused(self, prep, obs, seed: int, x0: np.ndarray):
-        """Dispatch one fused decide (async — device futures out):
-        returns (out, w, fused key).  Streaming preps rebuild or rank-k
-        push the device-resident accumulators as a side effect; the state
-        pytree is donated to (and returned by) the compiled program."""
+        """Dispatch one fused decide (async — device futures out): returns
+        (out, w, fused key, n_fc) where n_fc is the number of per-service
+        predictions in ``out`` (0 without the forecaster).  Streaming preps
+        rebuild or rank-k push the device-resident accumulators —
+        structural AND forecaster — as a side effect; the state pytrees are
+        donated to (and returned by) the compiled program."""
         if not (isinstance(prep, tuple) and len(prep) == 2
                 and prep[0] in ("batch", "delta")):
             prep = ("batch", prep)        # raw fit data (legacy call sites)
         plan = self._fit_plan
         kind, payload = prep
         k_cap = self._prep_k_cap(prep)
-        fkey = self._fused_key(k_cap)
+        fk_cap = self._fc_k_cap()
+        fkey = self._fused_key(k_cap, fk_cap)
+        rps_np = self._rps_vector(obs)
+        fc = self._forecast \
+            if (self._forecast_on() and self._fc_prep is not None) else None
+        fc_args: tuple = ()
+        n_fc = 0
+        if fc is not None:
+            # score the prediction that targeted THIS round, then build the
+            # cycle's traced gate inputs: lag windows, use mask, AR priors
+            fc.settle(self.rounds, rps_np)
+            lagm = fc.lag_matrix(self.table)
+            fwp, fpl = fc.prior_arrays()
+            fc_args = (jnp.asarray(fwp), jnp.asarray(fpl),
+                       jnp.asarray(lagm), jnp.asarray(fc.use_mask()))
+            n_fc = len(fc.services)
+        wp, pl = self._prior_args()
+        priors = (jnp.asarray(wp), jnp.asarray(pl))
         tail = (jnp.asarray(x0, jnp.float32), jax.random.PRNGKey(seed),
-                jnp.asarray(self._rps_vector(obs)),
-                jnp.float32(self._eta_t()))
+                jnp.asarray(rps_np), jnp.float32(self._eta_t()))
         if self._streaming():
             if kind == "batch":
                 # invalidated (first fit, churn, plan change): rebuild the
@@ -823,8 +1076,22 @@ class RASKAgent(PlanningAgent):
                 payload = [(_EMPTY_X, _EMPTY_Y)] * plan.n_relations
             st = self._stream
             dbuf = plan.fill_delta(payload, k_cap)
-            out, w, state = self._fused_fn(fkey, k_cap)(
-                st["state"], jnp.asarray(dbuf), *tail)
+            fn = self._fused_fn(fkey, k_cap, fk_cap)
+            if fc is None:
+                out, w, state = fn(st["state"], jnp.asarray(dbuf), *priors,
+                                   *tail)
+            else:
+                fkind, fpairs = self._fc_prep
+                if fkind == "batch" or fc.state is None:
+                    # forecaster ring invalidated too: rebuild it on device,
+                    # then run the same steady-state program empty
+                    fc.state = fc.plan.stream_rebuild(fpairs)
+                    fpairs = [(_EMPTY_X, _EMPTY_Y)] * fc.plan.n_relations
+                fdbuf = fc.plan.fill_delta(fpairs, fk_cap)
+                out, w, state, fw, fstate = fn(
+                    st["state"], jnp.asarray(dbuf), *priors,
+                    fc.state, jnp.asarray(fdbuf), *fc_args, *tail)
+                fc.state, fc.last_w = fstate, fw
             st["state"] = state
             st["pushes"] += 1
             every = self.cfg.stream_resync_every
@@ -832,45 +1099,71 @@ class RASKAgent(PlanningAgent):
                 # exact Gram recompute from the device ring (no upload):
                 # bounds incremental float32 drift on arbitrarily long runs
                 st["state"] = plan.stream_resync(st["state"])
+                if fc is not None and fc.state is not None:
+                    fc.state = fc.plan.stream_resync(fc.state)
         else:
             buf = plan.fill_packed(payload)
-            out, w = self._fused_fn(fkey, None)(jnp.asarray(buf), *tail)
+            fn = self._fused_fn(fkey, None, None)
+            if fc is None:
+                out, w = fn(jnp.asarray(buf), *priors, *tail)
+            else:
+                fbuf = fc.plan.fill_packed(self._fc_prep[1])
+                out, w, fw = fn(jnp.asarray(buf), *priors,
+                                jnp.asarray(fbuf), *fc_args, *tail)
+                fc.last_w = fw
         self._warm_keys.add(fkey)  # compiled now — future decides are warm
         self._warm_keys &= set(self._fused_fns)   # evicted keys re-cool
-        return out, w, fkey
+        return out, w, fkey, n_fc
 
     def _decide_fused(self, prep, obs, seed: int, x0: np.ndarray
                       ) -> Tuple[np.ndarray, np.ndarray, float]:
-        """Fit + solve + project + NOISE as ONE compiled dispatch; returns
-        (optimum for the warm-start cache, noised plan vector, score)."""
-        out, w, _ = self._dispatch_fused(prep, obs, seed, x0)
+        """Fit (+ forecast) + solve + project + NOISE as ONE compiled
+        dispatch; returns (optimum for the warm-start cache, noised plan
+        vector, score)."""
+        out, w, _, n_fc = self._dispatch_fused(prep, obs, seed, x0)
         out = np.asarray(out)     # the cycle's ONE device->host transfer
         self.stacked = self._fit_plan.stacked(w)   # weights stay on device
         self._models_view = None
-        d = self.problem.dim
-        return out[:d], out[d:2 * d], float(out[2 * d:].sum())
+        a, noised, score, pred = self._split_out(out, self.problem.dim, n_fc)
+        if pred is not None:
+            # round-keyed, so a cold re-run's second note overwrites the
+            # identical prediction instead of double-counting it
+            self._forecast.note(self.rounds + self._forecast.horizon, pred)
+        return a, noised, score
 
-    def _fused_key(self, k_cap: Optional[int] = None) -> tuple:
+    def _fused_key(self, k_cap: Optional[int] = None,
+                   fk_cap: Optional[int] = None) -> tuple:
         fp = self.fleet_problem
+        # fc_part != None exactly when the forecaster is composed into the
+        # dispatched program (same condition as _dispatch_fused's)
+        fc_part = (fk_cap, self.cfg.forecast_lags) \
+            if self._forecast_on() and self._fc_prep is not None else None
         return (self._fit_plan_key, k_cap, self._budget_starts,
                 self._budget_iters, self.cfg.pgd_lr, self.cfg.objective_impl,
-                None if fp is None else fp.layout_key)
+                None if fp is None else fp.layout_key, fc_part)
 
-    def _fused_fn(self, key: tuple, k_cap: Optional[int] = None):
+    def _fused_fn(self, key: tuple, k_cap: Optional[int] = None,
+                  fk_cap: Optional[int] = None):
         return cached_fn(self._fused_fns, key,
-                         lambda: self._build_fused_fn(k_cap))
+                         lambda: self._build_fused_fn(k_cap, fk_cap))
 
-    def _build_fused_fn(self, k_cap: Optional[int] = None):
+    def _build_fused_fn(self, k_cap: Optional[int] = None,
+                        fk_cap: Optional[int] = None):
         plan = self._fit_plan
         problem = self.problem
         fp = self.fleet_problem
         cfg = self.cfg
+        # forecaster composed into THIS program? (same condition as the key
+        # and the dispatch — cached_fn builds lazily inside the dispatch)
+        fc = self._forecast \
+            if (self._forecast_on() and self._fc_prep is not None) else None
+        fplan = None if fc is None else fc.plan
         solve = partial(pgd_solve, n_starts=self._budget_starts,
                         iters=self._budget_iters, lr=cfg.pgd_lr,
                         objective_impl=cfg.objective_impl)
         capacity = jnp.float32(self.capacity)
 
-        def tail(sm, x0, key, rps, eta):
+        def tail(sm, x0, key, rps, eta, extra=()):
             k_solve, k_noise = jax.random.split(key)
             if fp is None:
                 a, score = solve(x0, k_solve, problem.tables, sm, rps,
@@ -882,34 +1175,68 @@ class RASKAgent(PlanningAgent):
             # NOISE (Eq. 5): sigma = |a| * eta (the paper's worked example;
             # see _noise for why not the printed (a*eta)^2)
             noised = a + jax.random.normal(k_noise, a.shape) * jnp.abs(a) * eta
-            return jnp.concatenate([a, noised, scores])
+            return jnp.concatenate([a, noised, *extra, scores])
 
-        if k_cap is None:
-            def core(buf, x0, key, rps, eta):
+        def stacked(w):
+            return StackedModels(w, plan._E, plan._tmask, plan._scale,
+                                 plan.max_degree, ())
+
+        if k_cap is None and fc is None:
+            def core(buf, wp, pl, x0, key, rps, eta):
                 TRACE_COUNTS["decide_fused"] += 1      # trace-time only
                 Xp, Yp, rmask = plan.unpack(buf)
                 w = fit_batched_arrays(Xp, Yp, rmask, plan._E, plan._tmask,
                                        plan._nterms, plan._scale, plan.ridge,
-                                       plan.max_degree)
-                sm = StackedModels(w, plan._E, plan._tmask, plan._scale,
-                                   plan.max_degree, ())
-                return tail(sm, x0, key, rps, eta), w
-        else:
-            def core(state, dbuf, x0, key, rps, eta):
+                                       plan.max_degree, wp, pl)
+                return tail(stacked(w), x0, key, rps, eta), w
+        elif k_cap is None:
+            def core(buf, wp, pl, fbuf, fwp, fpl, lagm, use,
+                     x0, key, rps, eta):
+                TRACE_COUNTS["decide_fused"] += 1      # trace-time only
+                Xp, Yp, rmask = plan.unpack(buf)
+                w = fit_batched_arrays(Xp, Yp, rmask, plan._E, plan._tmask,
+                                       plan._nterms, plan._scale, plan.ridge,
+                                       plan.max_degree, wp, pl)
+                fXp, fYp, frm = fplan.unpack(fbuf)
+                fw = fit_batched_arrays(fXp, fYp, frm, fplan._E,
+                                        fplan._tmask, fplan._nterms,
+                                        fplan._scale, fplan.ridge,
+                                        fplan.max_degree, fwp, fpl)
+                pred, rps_eff = fc.predict_tracer(fw, lagm, use, rps)
+                return (tail(stacked(w), x0, key, rps_eff, eta, (pred,)),
+                        w, fw)
+        elif fc is None:
+            def core(state, dbuf, wp, pl, x0, key, rps, eta):
                 TRACE_COUNTS["decide_fused"] += 1      # trace-time only
                 state = plan.stream_update_arrays(
                     state, *plan.unpack_delta(dbuf, k_cap))
-                w = plan.stream_fit_arrays(state)      # solve from Gram
-                sm = StackedModels(w, plan._E, plan._tmask, plan._scale,
-                                   plan.max_degree, ())
-                return tail(sm, x0, key, rps, eta), w, state
+                w = plan.stream_fit_arrays(state, wp, pl)  # solve from Gram
+                return tail(stacked(w), x0, key, rps, eta), w, state
+        else:
+            def core(state, dbuf, wp, pl, fstate, fdbuf, fwp, fpl, lagm, use,
+                     x0, key, rps, eta):
+                TRACE_COUNTS["decide_fused"] += 1      # trace-time only
+                state = plan.stream_update_arrays(
+                    state, *plan.unpack_delta(dbuf, k_cap))
+                w = plan.stream_fit_arrays(state, wp, pl)
+                fstate = fplan.stream_update_arrays(
+                    fstate, *fplan.unpack_delta(fdbuf, fk_cap))
+                fw = fplan.stream_fit_arrays(fstate, fwp, fpl)
+                pred, rps_eff = fc.predict_tracer(fw, lagm, use, rps)
+                return (tail(stacked(w), x0, key, rps_eff, eta, (pred,)),
+                        w, state, fw, fstate)
 
-        # donate the design-matrix buffer — and in streaming mode the
-        # accumulator state, which the program updates in place and returns
-        # (CPU XLA cannot donate and would warn on every compile, so
-        # donation is accelerator-only)
-        donate = () if jax.default_backend() == "cpu" else \
-            ((0,) if k_cap is None else (0, 1))
+        # donate the design-matrix/delta buffers — and in streaming mode
+        # the accumulator states, which the program updates in place and
+        # returns (CPU XLA cannot donate and would warn on every compile,
+        # so donation is accelerator-only).  The prior/gate arrays are NOT
+        # donated: the zero-prior pair is cached host-side and re-sent.
+        if jax.default_backend() == "cpu":
+            donate: Tuple[int, ...] = ()
+        elif k_cap is None:
+            donate = (0,) if fc is None else (0, 3)
+        else:
+            donate = (0, 1) if fc is None else (0, 1, 4, 5)
         if cfg.aot:
             return _AotFn(core, donate)
         return jax.jit(core, donate_argnums=donate)
@@ -993,14 +1320,18 @@ class RASKAgent(PlanningAgent):
         padding tables themselves are cached in a ``BatchedFitPlan`` and
         only rebuilt when the capacity bucket or a per-relation degree
         changes.  Returns None until every relation has >= 3 usable rows
-        (the agent keeps exploring until then).
+        OR a transfer prior (the agent keeps exploring until then).
         """
         data = []
         degrees = []
         max_rows = 0
         for sid, target, feats, scale in self._rel_static:
             X, Y = self.table.design_matrix(sid, feats, target)
-            if len(Y) < 3:
+            if len(Y) < 3 and not self._has_prior(sid, target, feats):
+                # a relation with a captured transfer prior fits anyway:
+                # the prior-mean ridge supplies what the missing rows would
+                # have, so one arrival no longer re-enters fleet-wide
+                # exploration (the prior decays as real rows land)
                 return None
             max_rows = max(max_rows, len(Y))
             degrees.append(self._degree(sid, X, Y, scale))
@@ -1033,21 +1364,39 @@ class RASKAgent(PlanningAgent):
                 out.append(self._degrees.get(sid, cfg.delta))
         return tuple(out)
 
-    def _decide_avals(self, k_cap: Optional[int]) -> tuple:
+    def _decide_avals(self, k_cap: Optional[int],
+                      fk_cap: Optional[int] = None) -> tuple:
         """ShapeDtypeStruct avals of one fused decide dispatch — what
         ``precompile`` lowers against (no data touched)."""
         plan = self._fit_plan
         f32 = np.dtype(np.float32)
         sds = jax.ShapeDtypeStruct
+        priors = (sds((plan.n_relations, plan.t_max), f32),
+                  sds((plan.n_relations,), f32))
+        fc_part: tuple = ()
+        if self._forecast_on() and self._fc_prep is not None \
+                and self._forecast is not None:
+            fplan = self._forecast.plan
+            S = len(self.services)
+            gate = (sds((fplan.n_relations, fplan.t_max), f32),
+                    sds((fplan.n_relations,), f32),
+                    sds((S, self._forecast.lags), f32), sds((S,), f32))
+            if fk_cap is None:
+                nf = fplan.n_relations * fplan.row_capacity * (fplan.f_max + 2)
+                fc_part = (sds((nf,), f32),) + gate
+            else:
+                nfd = fplan.n_relations * fk_cap * (fplan.f_max + 2)
+                fc_part = (jax.eval_shape(fplan.stream_init),
+                           sds((nfd,), f32)) + gate
         tail = (sds((self.problem.dim,), f32),
                 jax.eval_shape(lambda: jax.random.PRNGKey(0)),
                 sds((len(self.services),), f32), sds((), f32))
         if k_cap is None:
             n = plan.n_relations * plan.row_capacity * (plan.f_max + 2)
-            return (sds((n,), f32),) + tail
+            return (sds((n,), f32),) + priors + fc_part + tail
         state = jax.eval_shape(plan.stream_init)
         nd = plan.n_relations * k_cap * (plan.f_max + 2)
-        return (state, sds((nd,), f32)) + tail
+        return (state, sds((nd,), f32)) + priors + fc_part + tail
 
     def precompile(self, layouts: Sequence[int] = (64,)) -> List[tuple]:
         """AOT-warm the fused decide for the given layout buckets BEFORE
@@ -1065,7 +1414,8 @@ class RASKAgent(PlanningAgent):
         path."""
         if not (self.cfg.fused and self.cfg.backend == "pgd"):
             return []
-        saved = (self._fit_plan, self._fit_plan_key, self._row_capacity)
+        saved = (self._fit_plan, self._fit_plan_key, self._row_capacity,
+                 self._forecast, self._fc_prep)
         warmed: List[tuple] = []
         try:
             for rows in layouts:
@@ -1076,9 +1426,18 @@ class RASKAgent(PlanningAgent):
                     self._fit_plan_key = key
                 k_cap = self._fit_plan.delta_capacity(0) \
                     if self._streaming() else None
-                fkey = self._fused_key(k_cap)
-                fn = self._fused_fn(fkey, k_cap)
-                avals = self._decide_avals(k_cap)
+                fk_cap = None
+                if self._forecast_on():
+                    # a throwaway forecaster bound to this layout: its plan
+                    # shapes (not its data) are what the lowering needs
+                    self._forecast = None
+                    fc = self._ensure_forecaster()
+                    self._fc_prep = ("batch", [])
+                    fk_cap = fc.plan.delta_capacity(0) \
+                        if self._streaming() else None
+                fkey = self._fused_key(k_cap, fk_cap)
+                fn = self._fused_fn(fkey, k_cap, fk_cap)
+                avals = self._decide_avals(k_cap, fk_cap)
                 if isinstance(fn, _AotFn):
                     fn.warm(*avals)
                 else:
@@ -1088,7 +1447,8 @@ class RASKAgent(PlanningAgent):
                 self._warm_keys.add(fkey)
                 warmed.append(fkey)
         finally:
-            self._fit_plan, self._fit_plan_key, self._row_capacity = saved
+            (self._fit_plan, self._fit_plan_key, self._row_capacity,
+             self._forecast, self._fc_prep) = saved
         return warmed
 
     def _degree(self, sid: str, X, Y, scale) -> int:
@@ -1239,13 +1599,32 @@ class RASKAgent(PlanningAgent):
         solve and the aggregate capacity rebuild.  Service-set changes
         rebuild the optimization problem, carrying each surviving service's
         warm-start slice over by name; models refit from the (persistent)
-        training table on the next cycle, and until every NEW relation has
-        >= 3 observed rows the agent re-enters exploration, like the
-        initial xi phase."""
+        training table on the next cycle.  With ``transfer_priors`` the
+        fleet-mean weights per service type (regression AND forecaster) are
+        captured here and warm-start every NEW relation through the
+        prior-mean ridge, so an arrival keeps the fleet solving instead of
+        re-entering exploration; without priors (first ever fit, transfer
+        disabled) the agent explores until every new relation has >= 3
+        observed rows, like the initial xi phase."""
         current = self.platform.services()
-        kept = [s for s in self.services if s in set(current)]
+        cur_set = set(current)
+        kept = [s for s in self.services if s in cur_set]
         new = [s for s in current if s not in set(self.services)]
         self.capacity = self.platform.capacity[self.cfg.resource]
+        # prune departed services from the control-plane state FIRST — on
+        # every refresh, including placement-only ones: stale burn states
+        # and accountant rings would otherwise keep a departed service's
+        # last (often terrible, mid-drain) SLI firing fast-burn alerts
+        # forever, pinning the per-cycle rebalance + full solver budget on
+        # a ghost
+        self.burn_states = {s: st for s, st in self.burn_states.items()
+                            if s in cur_set}
+        if self.accountant is not None:
+            self.accountant.prune(current)
+        for sid in [s for s in self._last_rps if s not in cur_set]:
+            self._last_rps.pop(sid, None)
+        for sid in [s for s in self._rps_scale if s not in cur_set]:
+            self._rps_scale.pop(sid, None)
         # churn is a regime change: restore the full solver AND scorer
         # budgets and let the score baseline re-establish before adapting
         self._budget_iters = self.cfg.pgd_iters
@@ -1257,6 +1636,16 @@ class RASKAgent(PlanningAgent):
         if kept == self.services and not new:
             self._build_fleet_problem()   # placement/capacity change only
             return
+        # the service set changed: capture transfer priors from the OLD
+        # fitted models/forecaster BEFORE the rebuild discards them —
+        # ``_sid_types`` still describes the old topology here, which is
+        # exactly what the stacked labels refer to
+        if self.cfg.transfer_priors:
+            self._transfer_priors = self._fleet_priors()
+        if self._forecast is not None:
+            self._fc_priors.update(self._forecast.type_means())
+        self._forecast = None             # rebuilt against the new set
+        self._fc_prep = None
         old_slice = {s.name: (self.problem.offsets[i], s.n_params)
                      for i, s in enumerate(self.problem.specs)}
         prev_x = self._cached_x

@@ -253,23 +253,37 @@ class StackedModels:
 
 
 def fit_batched_arrays(Xp, Yp, row_mask, exponents, term_mask, n_terms,
-                       x_scale, ridge, max_degree: int):
+                       x_scale, ridge, max_degree: int,
+                       w_prior=None, prior_lam=None):
     """Unjitted vmapped ridge core — composable into larger jitted pipelines
-    (the fused decide dispatches fit+solve as ONE program through this)."""
-    TRACE_COUNTS["fit_batched"] += 1      # executed at trace time only
+    (the fused decide dispatches fit+solve as ONE program through this).
 
-    def one(X, Y, rm, e, tm, nt, xs):
+    ``w_prior`` (R, T_max) / ``prior_lam`` (R,) add an optional prior-mean
+    ridge per relation — ``(A + (lam + prior_lam) I) w = b + prior_lam
+    w_prior`` — the transfer-learning path: a relation with few (or zero)
+    real rows is pulled toward fleet-mean weights, and ``prior_lam == 0``
+    reproduces the unprior'd solve exactly (both are traced data, so
+    engaging or decaying a prior never recompiles).  Priors on padded terms
+    are masked out, preserving the w == 0 padding invariant."""
+    TRACE_COUNTS["fit_batched"] += 1      # executed at trace time only
+    if w_prior is None:
+        w_prior = jnp.zeros(term_mask.shape, jnp.float32)
+    if prior_lam is None:
+        prior_lam = jnp.zeros((term_mask.shape[0],), jnp.float32)
+
+    def one(X, Y, rm, e, tm, nt, xs, wp, pl):
         Phi = _expand_gather(X / xs, e, max_degree) * tm[None, :]
         Phi = Phi * rm[:, None]
         A = Phi.T @ Phi
         # same scale-aware ridge as ``_fit``; the divisor is the relation's
         # *active* term count so padded shapes reproduce the unpadded lambda
         lam = ridge * (1.0 + jnp.trace(A) / nt)
-        A = A + lam * jnp.eye(Phi.shape[1], dtype=Phi.dtype)
-        return jnp.linalg.solve(A, Phi.T @ (Y * rm))
+        A = A + (lam + pl) * jnp.eye(Phi.shape[1], dtype=Phi.dtype)
+        return jnp.linalg.solve(A, Phi.T @ (Y * rm) + pl * (wp * tm))
 
     return jax.vmap(one)(Xp, Yp, row_mask, exponents, term_mask,
-                         n_terms.astype(jnp.float32), x_scale)
+                         n_terms.astype(jnp.float32), x_scale,
+                         w_prior, prior_lam)
 
 
 _fit_batched = jax.jit(fit_batched_arrays, static_argnames=("max_degree",))
@@ -551,20 +565,28 @@ class BatchedFitPlan:
         gram, xty = jax.vmap(one)(state.phi, state.y, state.count)
         return StreamState(state.phi, state.y, gram, xty, state.count)
 
-    def stream_fit_arrays(self, state: StreamState) -> jnp.ndarray:
+    def stream_fit_arrays(self, state: StreamState, w_prior=None,
+                          prior_lam=None) -> jnp.ndarray:
         """Ridge solve straight from the accumulators (traced) — the same
         scale-aware lambda as ``fit_batched_arrays`` (trace(G) IS trace(A)),
-        with zero design-matrix work."""
+        with zero design-matrix work.  ``w_prior``/``prior_lam`` add the
+        same optional prior-mean ridge as ``fit_batched_arrays`` (transfer
+        learning); ``prior_lam == 0`` solves the exact unprior'd system."""
         TRACE_COUNTS["fit_gram"] += 1             # trace-time only
         ridge = self.ridge
+        if w_prior is None:
+            w_prior = jnp.zeros((self.n_relations, self.t_max), jnp.float32)
+        if prior_lam is None:
+            prior_lam = jnp.zeros((self.n_relations,), jnp.float32)
 
-        def one(G, b, nt):
+        def one(G, b, nt, tm, wp, pl):
             lam = ridge * (1.0 + jnp.trace(G) / nt)
-            A = G + lam * jnp.eye(G.shape[0], dtype=G.dtype)
-            return jnp.linalg.solve(A, b)
+            A = G + (lam + pl) * jnp.eye(G.shape[0], dtype=G.dtype)
+            return jnp.linalg.solve(A, b + pl * (wp * tm))
 
         return jax.vmap(one)(state.gram, state.xty,
-                             self._nterms.astype(jnp.float32))
+                             self._nterms.astype(jnp.float32), self._tmask,
+                             w_prior, prior_lam)
 
     # host-side conveniences (each jitted once per plan) --------------------
     def _stream_jit(self, name: str, build):

@@ -299,6 +299,11 @@ class CycleRecord:
     pipelined: bool = False
     dispatch_s: float = 0.0
     collect_s: float = 0.0
+    # proactive scaling (RaskConfig(forecast=True)): services solved against
+    # predicted-horizon load this cycle, and the worst rolling relative
+    # forecast error (DecisionInfo passthrough)
+    forecast_used: int = 0
+    forecast_err: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -644,7 +649,11 @@ class EdgeEnvironment:
                     if fleet_burn else 0.0,
                     pipelined=info.pipelined if info else False,
                     dispatch_s=info.dispatch_s if info else 0.0,
-                    collect_s=info.collect_s if info else 0.0)
+                    collect_s=info.collect_s if info else 0.0,
+                    forecast_used=getattr(info, "forecast_used", 0)
+                    if info else 0,
+                    forecast_err=getattr(info, "forecast_err", 0.0)
+                    if info else 0.0)
                 history.append(rec)
                 if on_cycle:
                     on_cycle(rec)

@@ -6,6 +6,12 @@ Two one-hour patterns extracted from Google Cluster production traces
 so experiments are deterministic; both emit a *relative* load in [0, 1] which
 callers scale to a service's maximum RPS (100 for QR, 10 for CV in E3; the
 PC service sees a constant load).
+
+Past ``duration_s`` the curve repeats periodically (period ``duration_s + 1``
+seconds — the sampled curve length).  The seed behavior held the FINAL sample
+forever, so multi-hour runs silently lost their diurnal/bursty shape (and
+starved any load forecaster of signal); queries inside [0, duration_s] are
+byte-identical to the seed's.
 """
 from __future__ import annotations
 
@@ -36,7 +42,7 @@ def diurnal(max_rps: float, duration_s: float = 3600.0, seed: int = 7,
     curve = np.clip(base + jitter, 0.0, 1.0)
 
     def pattern(tt: float) -> float:
-        i = min(max(int(tt), 0), n - 1)
+        i = max(int(tt), 0) % n
         return float(curve[i] * max_rps)
 
     return pattern
@@ -61,7 +67,7 @@ def bursty(max_rps: float, duration_s: float = 3600.0, seed: int = 11,
     curve = np.clip(curve + jitter, 0.0, 1.0)
 
     def pattern(tt: float) -> float:
-        i = min(max(int(tt), 0), n - 1)
+        i = max(int(tt), 0) % n
         return float(curve[i] * max_rps)
 
     return pattern

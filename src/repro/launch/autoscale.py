@@ -81,6 +81,15 @@ def main(argv=None):
                          "'fail:edge-1@420,degrade:edge-0@300:0.5,"
                          "arrive:gemma3-1b@500,depart:SID@700' "
                          "(env.scenarios.parse_churn grammar)")
+    ap.add_argument("--forecast", action="store_true",
+                    help="proactive scaling: per-service AR load "
+                         "forecasters ride inside the fused decide and the "
+                         "solve targets predicted-horizon load wherever "
+                         "the hybrid gate's rolling forecast error allows "
+                         "(falls back to reactive rps on error spikes)")
+    ap.add_argument("--horizon", type=float, default=10.0,
+                    help="forecast horizon in seconds (--forecast); "
+                         "rounded to whole control cycles")
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined decide (dispatch-then-collect): each "
                          "cycle's solve runs on device while the plan is "
@@ -147,7 +156,9 @@ def main(argv=None):
                                  resource="chips",
                                  rebalance_every=args.rebalance_every,
                                  adapt_budget=args.adapt_budget,
-                                 pipeline=args.pipeline, shard=shard),
+                                 pipeline=args.pipeline, shard=shard,
+                                 forecast=args.forecast,
+                                 horizon_s=args.horizon),
                       seed=args.seed)
     accountant = None
     registry = None
@@ -183,6 +194,13 @@ def main(argv=None):
           f"{np.mean(post):.3f} violations={violation_rate(post):.2%} "
           f"capacity clips={capacity_clips} mean agent runtime="
           f"{np.mean([h.runtime_s for h in hist if not h.explored]) * 1e3:.0f}ms")
+    if args.forecast:
+        used = [h.forecast_used for h in hist]
+        errs = [h.forecast_err for h in hist if h.forecast_used]
+        print(f"forecast: proactive cycles={sum(1 for u in used if u)}"
+              f"/{len(hist)} max services gated in={max(used, default=0)} "
+              f"worst rolling err="
+              f"{max(errs, default=0.0):.2f}")
     if accountant is not None:
         fleet = accountant.global_state()
         alert_cycles = sum(1 for h in hist if h.alerts)

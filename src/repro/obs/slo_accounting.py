@@ -366,6 +366,29 @@ class SLOAccountant:
                     self._firing.pop(key, None)
                     self.alert_log.append((float(t), sid, p.name, "clear"))
 
+    def prune(self, keep) -> None:
+        """Drop the rings, cursors and firing alerts of services NOT in
+        ``keep`` — the churn hook: ``RASKAgent.refresh_topology`` passes the
+        platform's current service set, so a DEPARTED service stops feeding
+        ``fast_alerts``/``burn_weights``/``max_burn`` (its alert would
+        otherwise fire forever: no new scrapes ever clear it).  Evacuated
+        and migrated services are still registered and stay untouched, so
+        the survives-failover contract holds; the cumulative
+        ``alert_seconds`` ledger and past ``alert_log`` entries are kept —
+        a "clear" transition is logged for any alert firing at prune time
+        so fire/clear events stay balanced."""
+        with self._lock:
+            keep_set = set(keep)
+            t = self._last_t if self._last_t is not None else 0.0
+            for sid in [s for s in self._rings if s not in keep_set]:
+                self._rings.pop(sid, None)
+                self.states.pop(sid, None)
+                for key in [k for k in self._firing if k[0] == sid]:
+                    self._firing.pop(key, None)
+                    self.alert_log.append((float(t), sid, key[1], "clear"))
+            for sid in [s for s in self._cursor if s not in keep_set]:
+                self._cursor.pop(sid, None)
+
     # -- control-plane views ---------------------------------------------------
     def fast_alerts(self, policy: Optional[str] = None) -> List[str]:
         """Services whose ``policy`` alert is firing (default: the first —

@@ -507,3 +507,56 @@ def test_escaping_and_special_values():
     text = render(reg)
     assert r'# HELP esc line\nbreak "quote"' in text
     assert r'esc{label="a\"b\\c"} +Inf' in text
+
+
+# -- churn pruning (ISSUE 9 satellite): no ghost alerts after departures -------
+
+def test_accountant_prune_drops_departed_service_state():
+    platform, backends = _stub_platform()
+    budget = SLOBudget(objective=0.9, budget_window_s=500.0,
+                       policies=(BurnPolicy("fast", 60.0, 5.0, 3.0),),
+                       good_threshold=1.0)
+    acct = SLOAccountant(platform, budget)
+    victim, other = sorted(backends)
+    backends[victim].completion = 0.3            # hard outage from the start
+    t = 0.0
+    for _ in range(120):
+        t += 1.0
+        platform.scrape(t)
+        if int(t) % 10 == 0:
+            acct.update(t)
+    assert victim in acct.fast_alerts()
+    seconds = dict(acct.alert_seconds)
+    platform.deregister(victim)
+    acct.prune(platform.services())
+    # the ghost's rings, state and firing alert are gone; the survivor and
+    # the cumulative ledger are untouched, and the fire got its clear
+    assert victim not in acct.states and victim not in acct.fast_alerts()
+    assert other in acct.states
+    assert dict(acct.alert_seconds) == seconds
+    events = [(sid, ev) for _t, sid, _pol, ev in acct.alert_log]
+    assert (victim, "fire") in events and (victim, "clear") in events
+    # later updates never resurrect it (no scrapes arrive for it)
+    t += 10.0
+    platform.scrape(t)
+    acct.update(t)
+    assert victim not in acct.states
+
+
+def test_refresh_topology_prunes_departed_burn_and_rps_state():
+    env, agent = _paper_agent(xi=20)             # all-explore: no jit cost
+    acct = SLOAccountant(env.platform, SLOBudget())
+    agent.attach_accountant(acct)
+    env.run(agent, duration_s=80.0)
+    victim = sorted(agent.services)[0]
+    assert victim in agent.burn_states and victim in acct.states
+    assert victim in agent._last_rps
+    env.platform.deregister(victim)
+    agent.refresh_topology()
+    # the departed service's burn state, accountant rings and rps cache are
+    # dropped — a stale mid-drain SLI can no longer pin fast-burn alerts
+    assert victim not in agent.burn_states
+    assert victim not in acct.states
+    assert victim not in agent._last_rps and victim not in agent._rps_scale
+    live = set(env.platform.services())
+    assert set(agent.burn_states) <= live and set(acct.states) <= live

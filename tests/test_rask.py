@@ -216,3 +216,28 @@ def test_refresh_topology_carries_warm_start_across_service_set_change():
             np.testing.assert_allclose(got, mid[o:o + n])
     # models and fit plan are rebuilt lazily against the new relation set
     assert agent.stacked is None and agent._fit_plan is None
+
+
+# -- reactive blind spots (ISSUE 9 satellite) ---------------------------------
+
+def test_rps_vector_falls_back_to_last_known_not_zero(monkeypatch):
+    env, agent = _agent_only()
+    env.platform.scrape(1.0)
+    obs = agent.observe(5.0)
+    live = agent._rps_vector(obs)
+    assert (live > 0).all()
+    # scrape gap: an empty observation window AND an empty metrics store
+    # must reuse the last-known rates — solving against 0 rps scales the
+    # fleet to the floor mid-traffic and the next cycle pays the spike
+    monkeypatch.setattr(agent.platform, "latest_metrics", lambda sid: {})
+    stale = agent._rps_vector({})
+    np.testing.assert_array_equal(stale, live)
+    # a real reading refreshes its cache entry; the rest keep the fallback
+    sid = agent.services[0]
+    nxt = agent._rps_vector({sid: {"rps": float(live[0]) * 2.0}})
+    assert nxt[0] == pytest.approx(live[0] * 2.0)
+    np.testing.assert_array_equal(nxt[1:], live[1:])
+    assert agent._last_rps[sid] == pytest.approx(live[0] * 2.0)
+    # NaN readings are treated as missing, not cached
+    bad = agent._rps_vector({sid: {"rps": float("nan")}})
+    assert bad[0] == pytest.approx(live[0] * 2.0)

@@ -140,3 +140,19 @@ def test_parse_churn_grammar():
         parse_churn("fail:edge-0")                     # missing @t
     with pytest.raises(ValueError):
         parse_churn("explode:edge-0@5")
+
+
+def test_workloads_repeat_periodically_past_duration():
+    # the seed behavior held the FINAL sample forever past duration_s, so
+    # multi-hour runs flatlined (and starved the load forecaster of signal)
+    for pat_fn in (bursty, diurnal):
+        p = pat_fn(100.0, duration_s=600, seed=5)
+        n = 601                                   # sampled curve length
+        inside = [p(t) for t in range(0, 601, 13)]
+        assert [p(t + n) for t in range(0, 601, 13)] == inside   # period n
+        assert [p(t + 3 * n) for t in range(0, 601, 13)] == inside
+        tail = [p(t) for t in range(601, 601 + 1200, 7)]
+        assert max(tail) > 50.0                   # the shape survives hour 2
+        assert len({round(v, 6) for v in tail}) > 10   # not a flatline
+        assert p(-5.0) == p(0.0)                  # pre-start clamps, no wrap
+    assert constant(5.0)(10_000) == 5.0
