@@ -182,7 +182,23 @@ def dispatch_floor_rows(s_list=(3, 9), reps=100):
     return out
 
 
+def measured_serving_row():
+    """The e11 MEASURED stacked-engine point (tokens/s on the smoke model),
+    printed next to the analytic floors: the only row in this table that
+    comes from wall-clock decode steps rather than a cost model."""
+    p = ART / "e11_serving.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text()).get("roofline_point")
+
+
 def main():
+    measured = measured_serving_row()
+    if measured:
+        print(f"roofline[measured,{measured['arch']}-smoke,"
+              f"slots={measured['slots']}],{measured['step_us']:.0f},"
+              f"{measured['tokens_per_s']:.0f}tok/s MEASURED"
+              f" (e11 stacked engine)")
     dispatch = dispatch_floor_rows()
     for r in dispatch:
         print(f"roofline[dispatch,S={r['S']}],{r['aot_us']:.0f},"

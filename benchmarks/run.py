@@ -107,6 +107,13 @@ def _report_from_artifacts(name, common) -> bool:
             return False
         e10_forecast.report(r)
         return True
+    if name == "e11":
+        from . import e11_serving
+        r = common.load(e11_serving.ARTIFACT)
+        if not r:
+            return False
+        e11_serving.report(r)
+        return True
     return False
 
 
@@ -370,6 +377,48 @@ def check_e10() -> int:
     return 0 if ok else 1
 
 
+def check_e11() -> int:
+    """Real-serving gate vs the committed e11 artifact.  Both the committed
+    record and a fresh re-run must show: the stacked engine >= 2x the
+    dict-cache engine's step throughput at the top slot count, ZERO
+    steady-state jit recompiles in the timed decode window (TRACE_COUNTS,
+    h2d_* runtime transfer counters excluded), prefill tracing exactly once
+    per power-of-two prompt bucket, and the RASK-autoscaled serving run
+    sustaining steady-state mean fulfillment >= the fixed-equal-split
+    baseline under the identical workload.  All gates are comparative or
+    count-based — no absolute wall-clock numbers — so they hold across
+    machines; the engine numbers are measured wall-clock, which is the
+    point of the whole experiment."""
+    from . import common, e11_serving
+
+    committed = common.load("e11_serving")
+    if not committed or "engine" not in committed or "loop" not in committed:
+        print("e11-check,1,missing-committed-artifact")
+        return 1
+    e11_serving.ARTIFACT = "e11_serving_check"
+    res = e11_serving.run()
+    top = f"slots={max(e11_serving.SLOT_SWEEP)}"
+    ok = True
+    for src, tag in ((committed, "committed"), (res, "rerun")):
+        e, lo = src["engine"][top], src["loop"]
+        ok = (ok
+              and e["speedup"] >= 2.0
+              and e["stacked_steady_recompiles"] == 0
+              and src["engine"]["prefill_traces"]
+              == src["engine"]["distinct_buckets"]
+              and lo["auto_mean_fulfillment"]
+              >= lo["fixed_mean_fulfillment"])
+        print(f"e11-check[{tag}],{e['stacked_step_us']:.0f},"
+              f"speedup={e['speedup']:.2f}x (min 2.0x @ {top}) "
+              f"recompiles={e['stacked_steady_recompiles']} "
+              f"prefill_traces={src['engine']['prefill_traces']}"
+              f"/{src['engine']['distinct_buckets']} "
+              f"auto={lo['auto_mean_fulfillment']:.4f} "
+              f"fixed={lo['fixed_mean_fulfillment']:.4f}")
+    print(f"e11-check,{0 if ok else 1},{'ok' if ok else 'REGRESSION'}")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -380,12 +429,12 @@ def main() -> None:
     ap.add_argument("--check", default=None, metavar="SUITE",
                     help="regression gate: compare a quick run against the "
                          "committed artifact (supported: e6, e7, e8, e9, "
-                         "e10); exits nonzero on regression")
+                         "e10, e11); exits nonzero on regression")
     args = ap.parse_args()
 
     if args.check:
         checks = {"e6": check_e6, "e7": check_e7, "e8": check_e8,
-                  "e9": check_e9, "e10": check_e10}
+                  "e9": check_e9, "e10": check_e10, "e11": check_e11}
         if args.check not in checks:
             ap.error(f"--check supports {sorted(checks)}, got {args.check!r}")
         sys.exit(checks[args.check]())
@@ -393,7 +442,7 @@ def main() -> None:
     from . import (common, e1_convergence, e2_poly_degree,
                    e3_sota_comparison, e4_dimensions, e5_caching,
                    e6_scalability, e7_hot_path, e8_placement, e9_slo_burn,
-                   e10_forecast, roofline)
+                   e10_forecast, e11_serving, roofline)
 
     if args.quick:
         common.REPS = 2
@@ -441,6 +490,13 @@ def main() -> None:
         e10_forecast.DURATION = 600.0
         e10_forecast.TRANSFER_DURATION = 450.0
         e10_forecast.ARTIFACT = "e10_forecast_quick"
+        # CI-sized serving smoke: fewer timed steps, a shorter closed loop
+        # (the comparative auto-vs-fixed acceptance number lives in --check
+        # e11); separate artifact so the committed idle-machine record of
+        # measured step latencies is not clobbered by a loaded CI box
+        e11_serving.BENCH_STEPS = 15
+        e11_serving.LOOP_DURATION = 300.0
+        e11_serving.ARTIFACT = "e11_serving_quick"
 
     suites = {
         "e1": e1_convergence.main,
@@ -454,6 +510,7 @@ def main() -> None:
         "e8": e8_placement.main,
         "e9": e9_slo_burn.main,
         "e10": e10_forecast.main,
+        "e11": e11_serving.main,
         "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

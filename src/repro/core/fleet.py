@@ -305,6 +305,11 @@ class Fleet:
             h.reset_defaults()
 
     # -- telemetry -------------------------------------------------------------
+    def pump(self, t: float, dt: float = 1.0) -> None:
+        """Advance real-work backends (``advance`` hook) on every host."""
+        for h in self._hosts.values():
+            h.pump(t, dt)
+
     def scrape(self, t: float) -> None:
         for h in self._hosts.values():
             h.scrape(t)

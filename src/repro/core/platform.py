@@ -227,6 +227,20 @@ class MUDAP:
     def assignment(self, sid: str) -> Dict[str, float]:
         return dict(self._services[str(sid)].assignment)
 
+    # -- time advancement ----------------------------------------------------
+    def pump(self, t: float, dt: float = 1.0) -> None:
+        """Advance every backend that owns real work by ``dt`` seconds.
+
+        Backends are polled for an optional ``advance(t, dt)`` hook: simulated
+        services integrate their queue model, served services (serve/) run
+        their engine's decode steps for the tick's wall-clock budget. Backends
+        without the hook are skipped — scrape-only backends stay valid.
+        """
+        for svc in self._services.values():
+            advance = getattr(svc.backend, "advance", None)
+            if advance is not None:
+                advance(t, dt)
+
     # -- metric scraping (Fig. 2 step 3) --------------------------------------
     def scrape(self, t: float) -> None:
         # one bulk DB write (single lock acquisition) for all containers

@@ -169,6 +169,66 @@ def backlog_scenario(duration_s: float = 600.0, seed: int = 0,
     return env, hetero_knowledge([QR_PROFILE]), budget
 
 
+def real_serving_scenario(arch: str = "gemma3-1b", n_services: int = 2,
+                          duration_s: float = 600.0,
+                          capacity_chips: float = 6.0,
+                          max_rps: Sequence[float] = (4.0, 14.0),
+                          steps_per_chip_s: float = 5.0, max_seq: int = 64,
+                          slots: int = 4, latency_target: float = 12.0,
+                          budget_scale: float = 1.0 / 60.0):
+    """REAL serving under MUDAP: no simulator, no analytic surfaces.
+
+    Builds ``n_services`` ``ServedLMService``s (smoke-config ``arch``
+    models behind stacked-KV continuous-batching engines) on one device
+    with a shared chip budget, bursty per-service load with asymmetric
+    peaks (``max_rps`` cycles per service — the heavy tail is what makes a
+    fixed equal split lose), and an ``SLOAccountant`` whose first service
+    carries a latency-SLI budget override over its real queue while the
+    rest keep the fleet availability default.
+
+    Returns ``(platform, patterns, sids, knowledge, accountant)`` — drive
+    with ``repro.serve.run_serving_loop`` (agent or fixed baseline).
+    Everything scraped is measured: per-step wall-clock latency, real queue
+    depths, completed requests per second.
+    """
+    import dataclasses as _dc
+
+    from ..configs import get as _get
+    from ..models import build as _build
+    from ..core.platform import MUDAP
+    from ..obs import SLOBudget
+    from ..serve import ServedLMService, served_lm_profile
+
+    base = _dc.replace(_get(arch).smoke(), dtype="float32")
+    platform = MUDAP({"chips": capacity_chips}, host="edge-0")
+    patterns: Dict[str, Pattern] = {}
+    sids: List[str] = []
+    knowledge: Dict[str, Dict] = {}
+    for i in range(n_services):
+        prof = served_lm_profile(f"lm-real-{i}")
+        svc = ServedLMService(_build, base, profile=prof, slots=slots,
+                              max_seq=max_seq, seed=i, rps=1.0,
+                              prompt_len=14.0 + 4.0 * i,
+                              steps_per_chip_s=steps_per_chip_s)
+        assignment = dict(prof.defaults)
+        assignment["chips"] = capacity_chips / n_services
+        platform.register(svc.sid, prof.api, svc, list(prof.slos),
+                          assignment)
+        sid = str(svc.sid)
+        sids.append(sid)
+        knowledge[prof.type] = dict(prof.knowledge)
+        patterns[sid] = bursty(max_rps[i % len(max_rps)], duration_s,
+                               seed=10 + i)
+    from ..obs import SLOAccountant
+    accountant = SLOAccountant(
+        platform, SLOBudget(budget_window_s=3600.0).scaled(budget_scale),
+        overrides={sids[0]: SLOBudget(
+            sli="latency", latency_metric="queue",
+            latency_target=latency_target,
+            budget_window_s=3600.0).scaled(budget_scale)})
+    return platform, patterns, sids, knowledge, accountant
+
+
 # -- churn scenarios: the fleet changing mid-run ------------------------------
 
 def failover_scenario(duration_s: float = 1200.0, seed: int = 0,

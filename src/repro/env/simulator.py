@@ -274,6 +274,12 @@ class SimulatedService:
     def tick(self, t: float, dt: float = 1.0) -> None:
         self.pool.tick(t, dt, idx=[self.i])
 
+    def advance(self, t: float, dt: float = 1.0) -> None:
+        """``MUDAP.pump`` hook — simulated services advance by ticking their
+        pool row (``EdgeEnvironment.run`` ticks the whole pool itself and
+        never pumps, so there is no double-advance)."""
+        self.tick(t, dt)
+
 
 @dataclasses.dataclass
 class CycleRecord:

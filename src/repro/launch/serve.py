@@ -2,6 +2,12 @@
 engine, fed batched synthetic requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --requests 24
+
+``--engine dict`` selects the seed-era per-slot-cache baseline (one decode
+dispatch per active slot); the default stacked engine decodes every slot in
+one dispatch over a device-resident donated cache. ``--attn pallas_interpret``
+routes the batched decode step through ``kernels/decode_attention`` in
+interpret mode (``pallas`` on real accelerator backends).
 """
 from __future__ import annotations
 
@@ -14,7 +20,8 @@ import numpy as np
 
 from ..configs import get
 from ..models import build
-from ..serve.engine import EngineConfig, Request, ServingEngine
+from ..serve.engine import (DictCacheEngine, EngineConfig, Request,
+                            ServingEngine)
 
 
 def main(argv=None):
@@ -24,13 +31,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--engine", choices=("stacked", "dict"),
+                    default="stacked")
+    ap.add_argument("--attn", choices=("reference", "pallas",
+                                       "pallas_interpret"),
+                    default="reference")
     args = ap.parse_args(argv)
 
     cfg = get(args.arch).smoke()
-    cfg = dataclasses.replace(cfg, dtype="float32")
+    cfg = dataclasses.replace(cfg, dtype="float32", attn_impl=args.attn)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, EngineConfig(
+    cls = ServingEngine if args.engine == "stacked" else DictCacheEngine
+    engine = cls(model, params, EngineConfig(
         slots=args.slots, max_seq=args.prompt_len + args.max_new + 8,
         context=args.prompt_len, chips=4.0))
 
@@ -46,9 +59,11 @@ def main(argv=None):
         engine.step()
         ticks += 1
     dt = time.perf_counter() - t0
-    print(f"completed {len(engine.completed)}/{args.requests} requests in "
-          f"{ticks} engine steps, {dt:.1f}s; tokens_out={engine.tokens_out} "
-          f"({engine.tokens_out / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[{args.engine}] completed {len(engine.completed)}/"
+          f"{args.requests} requests in {ticks} engine steps, {dt:.1f}s; "
+          f"tokens_out={engine.tokens_out} "
+          f"({engine.tokens_out / max(dt, 1e-9):.1f} tok/s, "
+          f"step={1e3 * (engine.step_ewma_s or 0.0):.2f}ms)")
     return engine
 
 

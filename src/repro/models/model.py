@@ -74,8 +74,15 @@ class Model:
         return loss, {"ce": ce, "aux": aux}
 
     # -- serving ------------------------------------------------------------------
-    def prefill(self, params: Params, batch, max_seq: int):
+    def prefill(self, params: Params, batch, max_seq: int, length=None):
+        """``length`` (traced scalar) supports bucket-padded prompts on the
+        attention families; recurrent families (ssm/hybrid/encdec) would fold
+        pad tokens into their state, so they reject it."""
         cfg = self.cfg
+        if length is not None and not self.supports_padded_prefill:
+            raise ValueError(
+                f"family {cfg.family!r} runs a recurrent prefill; padded "
+                "prompts would corrupt its state (no `length` support)")
         if cfg.family == "encdec":
             return T.encdec_prefill(params, cfg, batch["frames"],
                                     batch["tokens"], dec_len=DEC_LEN)
@@ -83,7 +90,12 @@ class Model:
             return T.ssm_prefill(params, cfg, batch["tokens"], max_seq)
         if cfg.family == "hybrid":
             return T.hybrid_prefill(params, cfg, batch["tokens"], max_seq)
-        return T.decoder_prefill(params, cfg, batch["tokens"], max_seq)
+        return T.decoder_prefill(params, cfg, batch["tokens"], max_seq,
+                                 length=length)
+
+    @property
+    def supports_padded_prefill(self) -> bool:
+        return self.cfg.family in ("dense", "moe")
 
     def decode(self, params: Params, tokens, cache):
         cfg = self.cfg

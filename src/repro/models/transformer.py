@@ -160,17 +160,31 @@ def decoder_init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     return {"k": kv, "v": kv, "pos": jnp.int32(0)}
 
 
-def decoder_prefill(params: Params, cfg: ModelConfig, tokens, max_seq: int):
-    """Run the prompt, build the cache, return last-position logits."""
+def decoder_prefill(params: Params, cfg: ModelConfig, tokens, max_seq: int,
+                    length=None):
+    """Run the prompt, build the cache, return last-position logits.
+
+    ``length`` (optional, traced scalar) marks the true prompt length when
+    ``tokens`` is right-padded to a compile bucket: logits are gathered at
+    ``length - 1`` and the cache write cursor starts at ``length``.  Causality
+    makes this exact — positions >= length never influence the gathered
+    logits, and the stale pad K/V rows sit at positions the decode mask
+    excludes until they are overwritten by real decode steps.
+    """
     B, S = tokens.shape
     logits, _, kvs = decoder_forward(params, cfg, tokens, want_cache=True)
     k, v = kvs                                       # (L,B,S,KH,D)
     pad = max_seq - S
     k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if length is None:
+        last, pos = logits[:, -1], jnp.int32(S)
+    else:
+        pos = jnp.asarray(length, jnp.int32)
+        last = jnp.take(logits, pos - 1, axis=1)
     cache = {"k": k.astype(jnp.dtype(cfg.dtype)),
-             "v": v.astype(jnp.dtype(cfg.dtype)), "pos": jnp.int32(S)}
-    return logits[:, -1], cache
+             "v": v.astype(jnp.dtype(cfg.dtype)), "pos": pos}
+    return last, cache
 
 
 def decoder_decode(params: Params, cfg: ModelConfig, tokens, cache):

@@ -275,21 +275,42 @@ class SLOAccountant:
     """
 
     def __init__(self, platform, budget: Optional[SLOBudget] = None,
-                 retention_margin: float = 1.5):
+                 retention_margin: float = 1.5,
+                 overrides: Optional[Mapping[str, SLOBudget]] = None):
+        """``budget`` is the fleet default; ``overrides`` maps service ids to
+        their own ``SLOBudget`` (e.g. a latency-SLI budget for a really-served
+        LM while the simulated services keep the availability default).
+
+        Merge rule for the cross-service views: every *per-service* quantity
+        (goodness flags, burn rates, firing alerts, burn weights) uses the
+        service's own budget; the *fleet-level* ``global_state`` pools the
+        per-service goodness flags as ingested (so each sample was judged by
+        its owner's SLI) but evaluates burn rates, the budget window, and the
+        allowed error rate with the fleet DEFAULT budget — the platform-wide
+        ledger needs one common yardstick.  ``fast_alerts``'s default policy
+        name also comes from the default budget; a policy name that exists
+        only in an override is still tracked in ``alert_seconds``.
+        """
         self.platform = platform
         self.budget = budget if budget is not None else SLOBudget()
-        horizon = max([self.budget.budget_window_s]
-                      + [p.long_s for p in self.budget.policies])
+        self.overrides: Dict[str, SLOBudget] = dict(overrides or {})
+        budgets = [self.budget] + list(self.overrides.values())
+        horizon = max(max([b.budget_window_s] + [p.long_s for p in b.policies])
+                      for b in budgets)
         self._retention_s = retention_margin * horizon
         self._rings: Dict[str, _SliRing] = {}
         self._cursor: Dict[str, float] = {}
         self._firing: Dict[Tuple[str, str], float] = {}  # (sid, policy) -> t0
         self._last_t: Optional[float] = None
         self.alert_seconds: Dict[str, float] = {
-            p.name: 0.0 for p in self.budget.policies}
+            p.name: 0.0 for b in budgets for p in b.policies}
         self.alert_log: List[Tuple[float, str, str, str]] = []
         self.states: Dict[str, BurnState] = {}
         self._lock = threading.Lock()
+
+    def budget_for(self, sid: str) -> SLOBudget:
+        """The budget governing one service (override, else fleet default)."""
+        return self.overrides.get(str(sid), self.budget)
 
     # -- ingestion -------------------------------------------------------------
     def update(self, t: float) -> Dict[str, BurnState]:
@@ -310,7 +331,8 @@ class SLOAccountant:
                     continue
                 self._cursor[sid] = float(ts[-1])
                 slos = self.platform.service(sid).slos
-                sts, bad = sli_flags(self.budget, slos, ts, cols, vals)
+                sts, bad = sli_flags(self.budget_for(sid), slos, ts, cols,
+                                     vals)
                 if sts.size:
                     ring = self._rings.get(sid)
                     if ring is None:
@@ -333,8 +355,8 @@ class SLOAccountant:
     # -- burn math ------------------------------------------------------------
     def _states(self, t: float) -> Dict[str, BurnState]:
         out: Dict[str, BurnState] = {}
-        b = self.budget
         for sid, ring in self._rings.items():
+            b = self.budget_for(sid)
             ts, bad = ring.view()
             burn = b.burn_rates(ts, bad, until=t)
             rolling = error_rate(ts, bad, b.budget_window_s, until=t)
@@ -353,12 +375,14 @@ class SLOAccountant:
         dt = 0.0 if self._last_t is None else max(float(t) - self._last_t, 0.0)
         self._last_t = float(t)
         for sid, st in states.items():
-            for p in self.budget.policies:
+            for p in self.budget_for(sid).policies:
                 key = (sid, p.name)
                 was = key in self._firing
                 now = st.fired(p.name)
                 if now:
-                    self.alert_seconds[p.name] += dt if was else 0.0
+                    self.alert_seconds[p.name] = \
+                        self.alert_seconds.get(p.name, 0.0) + (dt if was
+                                                               else 0.0)
                 if now and not was:
                     self._firing[key] = float(t)
                     self.alert_log.append((float(t), sid, p.name, "fire"))
@@ -392,7 +416,8 @@ class SLOAccountant:
     # -- control-plane views ---------------------------------------------------
     def fast_alerts(self, policy: Optional[str] = None) -> List[str]:
         """Services whose ``policy`` alert is firing (default: the first —
-        fastest — configured policy), from the last ``update``."""
+        fastest — policy of the fleet DEFAULT budget; override budgets that
+        share the name fire under it too), from the last ``update``."""
         if not self.budget.policies:
             return []
         name = policy if policy is not None else self.budget.policies[0].name
@@ -401,19 +426,24 @@ class SLOAccountant:
     def burn_weights(self, cap: float = 4.0) -> Dict[str, float]:
         """Per-service rebalance priority weight in [1, 1 + cap]: 1 when no
         budget is burning, growing with the worst long-window burn relative
-        to its policy's threshold.  ``RASKAgent`` multiplies placement
-        score rows by these, so the per-snapshot migration budget is spent
-        on the services burning error budget fastest."""
+        to its policy's threshold — each service judged against its OWN
+        budget's policies.  ``RASKAgent`` multiplies placement score rows by
+        these, so the per-snapshot migration budget is spent on the services
+        burning error budget fastest."""
         out: Dict[str, float] = {}
         for sid, st in self.states.items():
             rel = max((st.burn[p.name][0] / p.threshold
-                       for p in self.budget.policies), default=0.0)
+                       for p in self.budget_for(sid).policies
+                       if p.name in st.burn), default=0.0)
             out[sid] = 1.0 + float(np.clip(rel, 0.0, cap))
         return out
 
     def global_state(self, t: Optional[float] = None) -> Optional[BurnState]:
         """Fleet-level burn state: all services' samples pooled into one
-        stream (the "is the PLATFORM inside its budget" view)."""
+        stream (the "is the PLATFORM inside its budget" view).  Each pooled
+        flag was judged by its service's own budget at ingestion; the pooled
+        burn/allowed math uses the fleet DEFAULT budget (see ``__init__``'s
+        merge rule)."""
         with self._lock:
             tt = self._last_t if t is None else float(t)
             if tt is None or not self._rings:

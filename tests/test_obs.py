@@ -560,3 +560,77 @@ def test_refresh_topology_prunes_departed_burn_and_rps_state():
     assert victim not in agent._last_rps and victim not in agent._rps_scale
     live = set(env.platform.services())
     assert set(agent.burn_states) <= live and set(acct.states) <= live
+
+
+# -- ISSUE 10: per-service SLO budget overrides -------------------------------
+
+def test_per_service_budget_overrides_merge_rule():
+    """Override map end to end: the overridden service is judged by its own
+    (latency) budget while the fleet keeps the availability default, with
+    the documented merge rule for the cross-service views — fast_alerts
+    defaults to the DEFAULT budget's first policy, burn_weights judges each
+    service by its own policies, and global_state pools per-service-judged
+    flags under the default budget's burn math."""
+    from repro.core import ApiDescription, ElasticityParameter, ServiceId
+
+    class _B:
+        def __init__(self):
+            self.queue = 0.0
+
+        def apply(self, param, value):
+            pass
+
+        def metrics(self):
+            return {"completion": 1.0, "rps": 10.0, "queue": self.queue}
+
+    api = ApiDescription("svc", [ElasticityParameter(
+        "cores", "resources", "/resources", 0.1, 8.0, None, True)])
+    platform = MUDAP({"cores": 8.0})
+    backends = {}
+    for i in range(2):
+        b = _B()
+        sid = ServiceId("edge-0", "svc", f"c{i}")
+        platform.register(sid, api, b, [SLO("completion", 1.0, 1.0)])
+        backends[str(sid)] = b
+    lm, sim = sorted(backends)
+
+    lat_budget = SLOBudget(objective=0.9, budget_window_s=500.0,
+                           policies=(BurnPolicy("lat-fast", 60.0, 5.0, 3.0),),
+                           sli="latency", latency_metric="queue",
+                           latency_target=2.0)
+    default = SLOBudget(objective=0.9, budget_window_s=300.0,
+                        policies=(BurnPolicy("fast", 60.0, 5.0, 3.0),))
+    acct = SLOAccountant(platform, default, overrides={lm: lat_budget})
+
+    assert acct.budget_for(lm) is lat_budget
+    assert acct.budget_for(sim) is default
+    # retention spans the LONGEST window across default + overrides
+    assert acct._retention_s == 1.5 * 500.0
+    # policy names from every budget are tracked
+    assert set(acct.alert_seconds) == {"fast", "lat-fast"}
+
+    backends[lm].queue = 10.0      # sustained backlog on the served LM only
+    t = 0.0
+    for _ in range(90):
+        t += 1.0
+        platform.scrape(t)
+        if int(t) % 10 == 0:
+            states = acct.update(t)
+    # the LM is judged by ITS budget (latency SLI over the real queue)...
+    assert states[lm].bad_total > 0
+    assert states[lm].fired("lat-fast")
+    assert set(states[lm].burn) == {"lat-fast"}
+    # ...while the sim service is judged by the availability default
+    assert states[sim].bad_total == 0 and not states[sim].firing
+    assert set(states[sim].burn) == {"fast"}
+    # fast_alerts defaults to the DEFAULT budget's first policy name
+    assert acct.fast_alerts() == []
+    assert acct.fast_alerts("lat-fast") == [lm]
+    # burn_weights judges each service against its own policies
+    w = acct.burn_weights()
+    assert w[lm] > w[sim] == 1.0
+    # global_state: pooled per-service-judged flags, default-budget math
+    g = acct.global_state()
+    assert g is not None
+    assert g.bad_total == states[lm].bad_total
+    assert set(g.burn) == {"fast"}
